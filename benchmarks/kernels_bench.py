@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: jnp reference path timings at simulator scale
+(CPU wall time; the Pallas kernels themselves are TPU-target and validated in
+interpret mode — their CPU interpret timings are not meaningful perf data,
+so what we time here is the oracle path the CPU engine actually runs,
+plus interpret-mode parity spot checks)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.constraint_match.ops import constraint_match
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.segment_usage.ops import segment_usage
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv_rows):
+    r = np.random.default_rng(0)
+
+    # constraint_match at paper scale: 1024 pending x 12500 nodes
+    P, N, R, C, K = 1024, 12500, 3, 6, 16
+    req = jnp.asarray(r.uniform(0, .5, (P, R)), jnp.float32)
+    cons = jnp.asarray(r.integers(0, 3, (P, C, 3)), jnp.int32)
+    total = jnp.asarray(r.uniform(.3, 1, (N, R)), jnp.float32)
+    reserved = total * .3
+    attrs = jnp.asarray(r.integers(0, 4, (N, K)), jnp.int32)
+    active = jnp.ones((N,), bool)
+    w = _time(constraint_match, req, cons, total, reserved, attrs, active,
+              use_kernel=False)
+    csv_rows.append(("kernel_constraint_match_1024x12500_jnp", w * 1e6,
+                     P * N / w / 1e9))       # G pair-evals/s
+
+    # segment_usage at cell-A scale: 262144 tasks -> 12500 nodes
+    T, V = 262_144, 3
+    node = jnp.asarray(r.integers(-1, N, T), jnp.int32)
+    vals = jnp.asarray(r.standard_normal((T, V)), jnp.float32)
+    mask = jnp.asarray(r.random(T) > .5)
+    w = _time(segment_usage, node, vals, mask, N, use_kernel=False)
+    csv_rows.append(("kernel_segment_usage_262k_jnp", w * 1e6, T / w / 1e6))
+
+    # flash attention parity + interpret timing at a small shape
+    B, S, H, D = 1, 256, 4, 64
+    q = jnp.asarray(r.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, S, H, D)), jnp.float32)
+    ref = flash_attention(q, k, v, use_kernel=False)
+    ker = flash_attention(q, k, v, use_kernel=True)
+    err = float(jnp.abs(ref - ker).max())
+    w = _time(flash_attention, q, k, v, use_kernel=False)
+    csv_rows.append(("kernel_flash_attention_256_xla", w * 1e6,
+                     err))                    # derived = parity max-err
+    return csv_rows

@@ -1,0 +1,30 @@
+"""Roofline summary rows derived from the dry-run artifacts (§Roofline):
+for each compiled (arch x shape) cell on the single-pod mesh, emit the
+dominant-term seconds and the roofline fraction. Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun",
+                   "16x16")
+
+
+def run(csv_rows):
+    paths = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not paths:
+        csv_rows.append(("roofline_no_artifacts_run_dryrun_first", 0.0, 0.0))
+        return csv_rows
+    for p in paths:
+        with open(p) as f:
+            art = json.load(f)
+        if art.get("status") != "ok":
+            continue
+        t = art["roofline"]
+        dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        name = f"roofline_{art['arch']}_{art['shape']}"
+        csv_rows.append((name, dom * 1e6, art.get("roofline_fraction") or 0.0))
+    return csv_rows

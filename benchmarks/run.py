@@ -1,0 +1,38 @@
+"""Benchmark driver — one module per paper table/figure + framework extras.
+Prints ``name,us_per_call,derived`` CSV rows (derived is benchmark-specific:
+speed factor, tasks/s, feature flag, roofline fraction, ...)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig7_scaling, kernels_bench, roofline_bench,
+                            schedulers_bench, table2_features, throughput)
+    suites = [
+        ("table2_features", table2_features),   # paper Table II
+        ("kernels", kernels_bench),
+        ("schedulers", schedulers_bench),       # paper §IV use case
+        ("fig7_scaling", fig7_scaling),         # paper Fig. 7
+        ("throughput", throughput),             # paper §IV/§VI claims
+        ("roofline", roofline_bench),           # framework §Roofline
+    ]
+    rows = []
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        t0 = time.time()
+        try:
+            start = len(rows)
+            mod.run(rows)
+            for r in rows[start:]:
+                print(f"{r[0]},{r[1]:.2f},{r[2]:.6g}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,0  # {type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end driver (the paper's kind of workload): a scaled Google-cell
+simulation with several schedulers consuming the same trace (MASB use case),
+pause/snapshot midway, restore, and a final comparison table.
+
+Run:  PYTHONPATH=src python examples/simulate_cluster.py [--nodes 256]
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+from repro.config import SimConfig
+from repro.core.pipeline import Simulation
+from repro.core.snapshot import load_snapshot, save_snapshot
+from repro.core.state import validate_invariants
+from repro.core.tracegen import SHIFT_US, generate_trace
+from repro.parsers.gcd import GCDParser
+
+SCHEDULERS = ("greedy", "first_fit", "random", "simulated_annealing")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=192)
+    ap.add_argument("--jobs", type=int, default=300)
+    ap.add_argument("--windows", type=int, default=160)
+    args = ap.parse_args()
+
+    cfg = SimConfig(max_nodes=args.nodes, max_tasks=args.nodes * 24,
+                    max_events_per_window=4096, sched_batch=256,
+                    n_attr_slots=12, max_constraints=4)
+    start = SHIFT_US - cfg.window_us
+
+    with tempfile.TemporaryDirectory() as d:
+        summary = generate_trace(d, n_machines=args.nodes, n_jobs=args.jobs,
+                                 horizon_windows=args.windows, seed=0,
+                                 usage_period_us=20_000_000)
+        print(f"trace: {summary.n_tasks} tasks, {summary.n_usage_records} "
+              f"usage records, horizon {args.windows} windows\n")
+
+        results = {}
+        for sched in SCHEDULERS:
+            parser = GCDParser(cfg, d)
+            sim = Simulation(cfg, parser.packed_windows(args.windows,
+                                                        start_us=start),
+                             scheduler=sched, batch_windows=32)
+            t0 = time.time()
+            state = sim.run()
+            wall = time.time() - t0
+            assert validate_invariants(state, cfg) == {}, sched
+            sf = sim.stats_frame()
+            results[sched] = dict(
+                wall=wall,
+                speed=sim.windows_done * cfg.window_us / 1e6 / wall,
+                placed=int(sf["placements"][-1]),
+                evicted=int(sf["evictions"][-1]),
+                balance=float(sf["util_balance_var"][-1]),
+                used=float(sf["used_frac"][-1][0]))
+
+        print(f"{'scheduler':<22}{'wall s':>8}{'speed x':>9}{'placed':>8}"
+              f"{'evicted':>8}{'balance var':>13}{'cpu used':>10}")
+        for s, r in results.items():
+            print(f"{s:<22}{r['wall']:>8.2f}{r['speed']:>9.1f}"
+                  f"{r['placed']:>8}{r['evicted']:>8}{r['balance']:>13.2e}"
+                  f"{r['used']:>10.2%}")
+
+        # pause / snapshot / restore (paper §IV; restore is our extension)
+        parser = GCDParser(cfg, d)
+        sim = Simulation(cfg, parser.packed_windows(args.windows,
+                                                    start_us=start),
+                         scheduler="greedy", batch_windows=32)
+        sim.run(max_windows=args.windows // 2)
+        snap = os.path.join(d, "mid.npz")
+        save_snapshot(snap, sim.state, cfg, sim.windows_done)
+        state, cfg2, done = load_snapshot(snap)
+        print(f"\nsnapshot at window {done} -> {os.path.getsize(snap)/2**20:.1f}"
+              f" MiB; restored OK (cfg match: {cfg2 == cfg})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end LM training driver: a ~100M-parameter qwen3-family model
+trained for a few hundred steps on synthetic structured data, with
+checkpointing + fault tolerance on.
+
+The structured synthetic stream (every second token is a deterministic
+function of its predecessor) gives the model something learnable: loss should
+drop well below ln(vocab) as it learns the copy+shift rule on half the
+positions.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--small]
+(--small: ~2M params for a fast CI-scale run; default ~100M.)
+"""
+import argparse
+import dataclasses
+import time
+
+from repro.config import ModelConfig, TrainConfig, describe
+from repro.distributed.fault import FaultTolerantRunner
+
+
+def build_cfg(small: bool) -> ModelConfig:
+    if small:
+        return ModelConfig(name="lm-2m", family="dense", n_layers=2,
+                           d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+                           d_ff=256, vocab_size=512, qk_norm=True,
+                           tie_embeddings=True, remat_policy="none",
+                           dtype="float32")
+    # ~100M active params, qwen3-style (qk_norm, GQA, SwiGLU, tied embeds)
+    return ModelConfig(name="lm-100m", family="dense", n_layers=8,
+                       d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+                       d_ff=2304, vocab_size=32_768, qk_norm=True,
+                       tie_embeddings=True, remat_policy="none",
+                       dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.small)
+    print(describe(cfg))
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=20,
+                     total_steps=args.steps, checkpoint_every=100,
+                     checkpoint_dir=args.ckpt_dir, num_microbatches=1)
+    runner = FaultTolerantRunner(cfg, tc, batch=args.batch,
+                                 seq_len=args.seq_len)
+    runner.install_preemption_handler()
+
+    t0 = time.time()
+    report = runner.run(args.steps, inject=False)
+    wall = time.time() - t0
+    losses = report["losses"]
+    for i in range(0, len(losses), max(len(losses) // 15, 1)):
+        print(f"step {i:4d}  loss {losses[i]:.4f}")
+    import math
+    print(f"\nfinal loss {losses[-1]:.4f}  (uniform = ln V = "
+          f"{math.log(cfg.vocab_size):.2f};  copy-rule floor ~= "
+          f"{0.5 * math.log(cfg.vocab_size):.2f})")
+    print(f"{len(losses)} steps in {wall:.0f}s "
+          f"({len(losses)/wall:.2f} steps/s), "
+          f"checkpoints in {args.ckpt_dir}")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Frozen configuration dataclasses for models, shapes, training and the simulator.
+
+Every assigned architecture gets a module in ``repro.configs`` that builds a
+:class:`ModelConfig`; shapes come from :data:`SHAPES`. Configs are plain
+frozen dataclasses so they hash, print and diff cleanly and can be embedded in
+checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for the layer-pattern compiler in models/model.py."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0               # routed experts (0 = dense MLP)
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    n_shared_experts: int = 0        # qwen2-moe style always-on experts
+    shared_d_ff: int = 0             # hidden dim of each shared expert
+    moe_period: int = 1              # every `moe_period`-th layer is MoE
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01    # load-balancing aux loss
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0               # N (state size); 0 = no mamba layers
+    ssm_head_dim: int = 64           # P
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_chunk: int = 128             # SSD chunk length
+    ssm_conv: int = 4                # causal conv width
+    attn_period: int = 0             # hybrid: 1 attn layer per `attn_period`
+    attn_offset: int = 0             # index of the attn layer inside a period
+
+    # --- modality frontends (stubs) ---
+    n_codebooks: int = 1             # musicgen: EnCodec codebooks (summed embeds, K heads)
+    n_prefix: int = 0                # llava: precomputed patch embeddings prepended
+
+    # --- numerics / impl ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    attention_impl: str = "xla"      # xla | pallas
+    remat_policy: str = "full"       # none | minimal | full
+    # --- beyond-paper perf knobs (EXPERIMENTS.md §Perf) ---
+    chunked_ce: bool = False         # streaming-logsumexp CE over vocab chunks
+    ce_chunks: int = 8
+    moe_impl: str = "gspmd"          # gspmd | shard_map (explicit EP dispatch)
+    pad_head_shard: bool = False     # shard attn heads over TP even when
+                                     # H % tp != 0 (GSPMD pads; beats 16x
+                                     # replicated attention for 56/24-head archs)
+    bf16_weight_gather: bool = False # cast f32 master weights to bf16 BEFORE
+                                     # the per-layer FSDP all-gathers (halves
+                                     # gather wire + grad reduce-scatter bytes)
+    prefill_microbatches: int = 1    # process the prompt batch in chunks:
+                                     # divides prefill activation transients
+                                     # by M (the cache output is unavoidable)
+    logits_softcap: float = 0.0
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so the TP axis (<=16) always divides it."""
+        return _round_up(self.vocab_size, 256)
+
+    def layer_pattern(self) -> Tuple[Tuple[str, str], ...]:
+        """Return the repeating ``(mixer, mlp)`` pattern.
+
+        The full stack is ``n_layers // len(pattern)`` repeats of this pattern,
+        scanned over. Mixer in {attn, mamba}; mlp in {dense, moe, none}.
+        """
+        period = 1
+        if self.attn_period > 1:
+            period = self.attn_period
+        if self.n_experts and self.moe_period > 1:
+            period = max(period, self.moe_period)
+        # period must embed both cycles
+        if self.attn_period > 1 and self.n_experts and self.moe_period > 1:
+            import math
+            period = math.lcm(self.attn_period, self.moe_period)
+        pattern = []
+        for i in range(period):
+            if self.ssm_state and self.attn_period == -1:
+                mixer = "mamba"                      # pure SSM
+            elif self.ssm_state and self.attn_period > 1:
+                mixer = "attn" if (i % self.attn_period) == self.attn_offset else "mamba"
+            else:
+                mixer = "attn"
+            if self.d_ff == 0 and not self.n_experts:
+                mlp = "none"                          # mamba2-780m style
+            elif self.n_experts and (i % self.moe_period) == (self.moe_period - 1 if self.moe_period > 1 else 0):
+                mlp = "moe"
+            else:
+                mlp = "dense"
+            pattern.append((mixer, mlp))
+        assert self.n_layers % len(pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by pattern period {len(pattern)}")
+        return tuple(pattern)
+
+    @property
+    def n_repeats(self) -> int:
+        return self.n_layers // len(self.layer_pattern())
+
+    def has_attention(self) -> bool:
+        return any(m == "attn" for m, _ in self.layer_pattern())
+
+    def has_mamba(self) -> bool:
+        return any(m == "mamba" for m, _ in self.layer_pattern())
+
+    def is_subquadratic(self) -> bool:
+        """True if the arch can run the 512K-token long-context decode shape."""
+        if not self.has_attention():
+            return True
+        # hybrids with sparse attention layers qualify (jamba: 1 attn per 8)
+        pat = self.layer_pattern()
+        frac_attn = sum(1 for m, _ in pat if m == "attn") / len(pat)
+        return frac_attn <= 0.25
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs in the roofline)."""
+        d, v = self.d_model, self.padded_vocab
+        hd = self.resolved_head_dim
+        total = v * d                                    # embedding
+        if not self.tie_embeddings:
+            total += d * v * self.n_codebooks            # output head(s)
+        if self.n_codebooks > 1:
+            total += (self.n_codebooks - 1) * v * d      # extra codebook embeds
+        for mixer, mlp in self.layer_pattern() * self.n_repeats:
+            total += d                                   # pre-mixer norm
+            if mixer == "attn":
+                total += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+                if self.qk_norm:
+                    total += 2 * hd
+            else:                                        # mamba2 block
+                din, h, n = self.d_inner, self.ssm_heads, self.ssm_state
+                total += d * (2 * din + 2 * n + h)       # in_proj (z,x,B,C,dt)
+                total += self.ssm_conv * (din + 2 * n)   # conv
+                total += 3 * h + din                     # A, D, dt_bias, norm
+                total += din * d                         # out_proj
+            if mlp == "dense":
+                total += d + 3 * d * self.d_ff
+            elif mlp == "moe":
+                total += d + self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+                total += self.n_shared_experts * 3 * d * self.shared_d_ff
+        total += d                                       # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        dense_like = replace(self, n_experts=0, moe_top_k=0, n_shared_experts=0,
+                             d_ff=self.d_ff or 1)
+        base = dense_like.param_count()
+        # remove the placeholder dense MLPs we just added where MoE layers were
+        n_moe = sum(1 for _, m in self.layer_pattern() if m == "moe") * self.n_repeats
+        n_dense_orig = sum(1 for _, m in self.layer_pattern() if m == "dense") * self.n_repeats
+        base -= (n_moe + n_dense_orig) * (d + 3 * d * (self.d_ff or 1))
+        base += n_dense_orig * (d + 3 * d * self.d_ff)
+        per_moe = (d + self.moe_top_k * 3 * d * self.moe_d_ff + d * self.n_experts
+                   + self.n_shared_experts * 3 * d * self.shared_d_ff)
+        return base + n_moe * per_moe
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    num_microbatches: int = 1
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256, num_microbatches=8),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32, num_microbatches=1),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Training / serving runtime configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    num_microbatches: int = 1
+    grad_compression: str = "none"    # none | int8_ef
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    log_every: int = 10
+
+
+# ---------------------------------------------------------------------------
+# Simulator configuration (the paper's system)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SimConfig:
+    """AGOCS engine configuration.
+
+    Defaults mirror the paper: 5-second collection windows, 5 parser workers,
+    buffers of <=1e6 events / 30 sim-minutes ahead, GCD cell with 12.5K nodes.
+    """
+    max_nodes: int = 12_500
+    max_tasks: int = 262_144          # live-task slots (GCD ~140K running)
+    max_events_per_window: int = 8_192
+    window_us: int = 5_000_000        # 5 sim-seconds (paper's collection tick)
+    n_resources: int = 3              # cpu, memory, disk
+    n_usage_stats: int = 8            # cpu, canon-mem, assigned-mem, page-cache,
+                                      # disk-io-time, disk-space, cpi, mai
+    n_attr_slots: int = 16            # node attribute columns
+    max_constraints: int = 6          # per-task constraint slots
+    n_parser_workers: int = 5         # paper's 5 Akka actors
+    buffer_windows: int = 360         # 30 sim-minutes of 5s windows
+    buffer_max_events: int = 1_000_000
+    speed_factor: float = 0.0         # 0 = as-fast-as-possible; else real-time x N
+    scheduler: str = "greedy"
+    sched_batch: int = 1_024          # max pending tasks considered per window
+    seed: int = 0
+    use_kernels: bool = False         # Pallas interpret kernels (CPU) vs jnp ref
+    trace_time_shift_us: int = 600_000_000  # GCD's 10-minute shift
+
+    def scaled(self, nodes: int, tasks: int) -> "SimConfig":
+        return replace(self, max_nodes=nodes, max_tasks=tasks)
+
+
+REDUCED_SIM = SimConfig(max_nodes=64, max_tasks=512, max_events_per_window=256,
+                        n_attr_slots=8, max_constraints=4, buffer_windows=16,
+                        buffer_max_events=4096, sched_batch=64)
+
+
+def describe(cfg: ModelConfig) -> str:
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    pat = cfg.layer_pattern()
+    return (f"{cfg.name}: {cfg.n_layers}L d={cfg.d_model} H={cfg.n_heads}/{cfg.n_kv_heads} "
+            f"dff={cfg.d_ff or cfg.moe_d_ff} vocab={cfg.vocab_size} "
+            f"params={n/1e9:.2f}B active={na/1e9:.2f}B pattern={len(pat)}x{cfg.n_repeats}")

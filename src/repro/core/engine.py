@@ -1,0 +1,195 @@
+"""The windowed simulation engine — AGOCS's WorkloadGenerator in JAX.
+
+Every 5 sim-seconds (one *window*) AGOCS drains its parser buffers and applies
+the collected events to the shared state, then the scheduler(s) under test
+react. Here a window is one ``sim_window_step`` call: vectorised scatters
+apply the event batch, per-node accounting is recomputed with the
+segment-usage kernel, the pluggable scheduler places pending tasks via the
+constraint-match kernel, and a stats row is emitted.
+
+``run_windows`` scans a stack of windows on-device; the host pipeline
+(core/pipeline.py) streams stacked windows in while the device computes —
+the JAX analogue of the paper's five buffering parser actors.
+
+Event-application order inside a window (matches the paper's timestamp
+linearisation; the host pipeline guarantees at most one update per (slot,
+field-group) per window):
+  1. node add / update / attr / remove,
+  2. task removals (EVICT/FAIL/FINISH/KILL/LOST),
+  3. task adds + requirement/constraint updates,
+  4. usage samples,
+  5. node-removal evictions (running tasks on dead nodes -> back to pending),
+  6. accounting recompute (segment sums),
+  7. scheduling,
+  8. stats.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SimConfig
+from repro.core import stats as stats_mod
+from repro.core.events import REMOVE_REASON_EVICT, EventKind, EventWindow
+from repro.core.state import (SimState, TASK_EMPTY, TASK_PENDING,
+                              TASK_RUNNING, init_state)
+from repro.kernels.segment_usage.ops import segment_usage
+
+
+def _masked_slot(mask: jax.Array, slot: jax.Array, overflow: int) -> jax.Array:
+    """Route masked-out rows to a dummy overflow index (scatter no-op row)."""
+    return jnp.where(mask, slot, overflow)
+
+
+def apply_node_events(state: SimState, w: EventWindow, cfg: SimConfig
+                      ) -> SimState:
+    N = cfg.max_nodes
+    kind = w.kind
+
+    def scat(arr, mask, val):
+        return arr.at[_masked_slot(mask, w.slot, N)].set(val, mode="drop")
+
+    add = kind == EventKind.ADD_NODE
+    upd = kind == EventKind.UPDATE_NODE_RESOURCES
+    rem = kind == EventKind.REMOVE_NODE
+
+    node_active = state.node_active
+    node_active = node_active.at[_masked_slot(add, w.slot, N)].set(True, mode="drop")
+    node_total = scat(state.node_total, add | upd, w.a)
+
+    aat = kind == EventKind.ADD_NODE_ATTR
+    rat = kind == EventKind.REMOVE_NODE_ATTR
+    attr_rows = _masked_slot(aat | rat, w.slot, N)
+    attr_vals = jnp.where(aat, w.attr_val, 0)
+    node_attrs = state.node_attrs.at[attr_rows, w.attr_idx].set(
+        attr_vals, mode="drop")
+
+    node_active = node_active.at[_masked_slot(rem, w.slot, N)].set(False, mode="drop")
+    return state._replace(node_active=node_active, node_total=node_total,
+                          node_attrs=node_attrs)
+
+
+def apply_task_events(state: SimState, w: EventWindow, cfg: SimConfig
+                      ) -> SimState:
+    T = cfg.max_tasks
+    kind = w.kind
+
+    # --- removals first (a slot can be freed and re-used next window) ---
+    rem = kind == EventKind.REMOVE_TASK
+    rem_rows = _masked_slot(rem, w.slot, T)
+    live = state.task_state[w.slot] != TASK_EMPTY
+    evicted = rem & live & (w.a[:, 0] == float(REMOVE_REASON_EVICT))
+    n_evict = jnp.sum(evicted).astype(jnp.int32)
+    n_rem = jnp.sum(rem & live).astype(jnp.int32) - n_evict
+    task_state = state.task_state.at[rem_rows].set(TASK_EMPTY, mode="drop")
+    task_node = state.task_node.at[rem_rows].set(-1, mode="drop")
+
+    # --- adds / updates ---
+    add = kind == EventKind.ADD_TASK
+    upd = kind == EventKind.UPDATE_TASK_REQUIRED
+    ucon = kind == EventKind.UPDATE_TASK_CONSTRAINTS
+
+    task_state = task_state.at[_masked_slot(add, w.slot, T)].set(
+        TASK_PENDING, mode="drop")
+    task_node = task_node.at[_masked_slot(add, w.slot, T)].set(-1, mode="drop")
+    task_req = state.task_req.at[_masked_slot(add | upd, w.slot, T)].set(
+        w.a, mode="drop")
+    task_prio = state.task_prio.at[_masked_slot(add | upd, w.slot, T)].set(
+        w.prio, mode="drop")
+    task_job = state.task_job.at[_masked_slot(add, w.slot, T)].set(
+        w.job, mode="drop")
+    task_constraints = state.task_constraints.at[
+        _masked_slot(add | ucon, w.slot, T)].set(w.constraints, mode="drop")
+
+    # --- usage samples ---
+    use = kind == EventKind.UPDATE_TASK_USED
+    task_usage = state.task_usage.at[_masked_slot(use, w.slot, T)].set(
+        w.u, mode="drop")
+
+    return state._replace(
+        task_state=task_state, task_node=task_node, task_req=task_req,
+        task_prio=task_prio, task_job=task_job,
+        task_constraints=task_constraints, task_usage=task_usage,
+        completions=state.completions + n_rem,
+        evictions=state.evictions + n_evict)
+
+
+def evict_invalid(state: SimState, cfg: SimConfig) -> SimState:
+    """Evict running tasks whose placement became invalid:
+
+    * the node went inactive (maintenance/removal — paper §III bullet 4), or
+    * a capacity UPDATE shrank the node below its current reservation
+      (GCD machine updates; Google's scheduler would evict — so do we).
+
+    Evicted tasks go back to pending, mirroring GCD's EVICT-then-clone cycle.
+    Requires node_reserved to be current (call recompute_accounting first).
+    """
+    node_idx = jnp.maximum(state.task_node, 0)
+    dead = ~state.node_active[node_idx]
+    over = (state.node_reserved > state.node_total + 1e-6).any(axis=1)
+    bad = (state.task_state == TASK_RUNNING) & (dead | over[node_idx])
+    n_evict = jnp.sum(bad).astype(jnp.int32)
+    return state._replace(
+        task_state=jnp.where(bad, TASK_PENDING, state.task_state),
+        task_node=jnp.where(bad, -1, state.task_node),
+        evictions=state.evictions + n_evict)
+
+
+def recompute_accounting(state: SimState, cfg: SimConfig) -> SimState:
+    """node_reserved / node_used from the task table (segment-usage kernel)."""
+    from repro.core.stats import U_CPU, U_CANON_MEM, U_DISK_SPACE
+    running = state.task_state == TASK_RUNNING
+    reserved = segment_usage(state.task_node, state.task_req, running,
+                             cfg.max_nodes, use_kernel=cfg.use_kernels)
+    # align usage columns with the (cpu, memory, disk) resource axes
+    used_cols = state.task_usage[:, jnp.array([U_CPU, U_CANON_MEM,
+                                               U_DISK_SPACE])]
+    used = segment_usage(state.task_node, used_cols, running,
+                         cfg.max_nodes, use_kernel=cfg.use_kernels)
+    return state._replace(node_reserved=reserved, node_used=used)
+
+
+def make_window_step(cfg: SimConfig, scheduler_fn: Callable
+                     ) -> Callable[[SimState, EventWindow, jax.Array],
+                                   Tuple[SimState, Dict[str, jax.Array]]]:
+    """Build the jit-able single-window transition."""
+
+    def sim_window_step(state: SimState, w: EventWindow, rng: jax.Array
+                        ) -> Tuple[SimState, Dict[str, jax.Array]]:
+        state = apply_node_events(state, w, cfg)
+        state = apply_task_events(state, w, cfg)
+        state = recompute_accounting(state, cfg)
+        state = evict_invalid(state, cfg)
+        state = recompute_accounting(state, cfg)
+        state = scheduler_fn(state, cfg, rng)
+        state = recompute_accounting(state, cfg)
+        state = state._replace(window=state.window + 1)
+        return state, stats_mod.window_stats(state, cfg)
+
+    return sim_window_step
+
+
+def run_windows(state: SimState, windows: EventWindow, cfg: SimConfig,
+                scheduler_fn: Callable, seed: int = 0
+                ) -> Tuple[SimState, Dict[str, jax.Array]]:
+    """Scan the engine over stacked windows (W leading dim on every field)."""
+    step = make_window_step(cfg, scheduler_fn)
+    W = windows.kind.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(seed), W)
+
+    def body(s, xs):
+        w, k = xs
+        return step(s, w, k)
+
+    return jax.lax.scan(body, state, (windows, keys))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scheduler_name"))
+def run_windows_jit(state: SimState, windows: EventWindow, cfg: SimConfig,
+                    scheduler_name: str, seed: int = 0):
+    from repro.core.schedulers import get_scheduler
+    return run_windows(state, windows, cfg, get_scheduler(scheduler_name),
+                       seed)

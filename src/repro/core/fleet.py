@@ -1,0 +1,110 @@
+"""Distributed scheduler fleets — the paper's multi-machine deployment
+(§V: "Akka Actors ... can be deployed in distributed environment. Therefore,
+AGOCS can be deployed on multiple machines"; §IV runs 5 schedulers at reduced
+speed on one laptop).
+
+Here a *fleet* is N scheduler replicas consuming ONE workload concurrently:
+replicas vmap over the leading axis and shard over the mesh's data axes
+(pods run independent replica groups), while each replica's node table can
+shard over `model`. This turns the paper's 5-schedulers-at-5x-speed
+experiment into hundreds-of-replicas-at-full-speed — the Monte-Carlo mode
+used for scheduler hyperparameter sweeps.
+
+``lower_fleet`` is the simulator's own production-mesh dry-run entry: it
+lowers + compiles a fleet step on the 16x16 / 2x16x16 mesh exactly like the
+LM cells (used by tests and the dry-run extras).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import SimConfig
+from repro.core import engine as engine_mod
+from repro.core.events import EventWindow
+from repro.core.schedulers import get_scheduler
+from repro.core.state import SimState, init_state
+
+
+def run_fleet(windows: EventWindow, cfg: SimConfig, scheduler: str,
+              n_replicas: int, seed: int = 0
+              ) -> Tuple[SimState, Dict[str, jax.Array]]:
+    """Run `n_replicas` copies of one scheduler over the same windows with
+    different PRNG streams. Returns stacked final states + stacked stats."""
+    state0 = init_state(cfg)
+
+    def one(replica_seed):
+        return engine_mod.run_windows(state0, windows, cfg,
+                                      get_scheduler(scheduler),
+                                      seed=replica_seed)
+
+    seeds = seed + jnp.arange(n_replicas)
+    return jax.vmap(one)(seeds)
+
+
+def fleet_fn(cfg: SimConfig, scheduler: str, n_replicas: int):
+    """jit-able (windows, seeds) -> (final states, stats) fleet step."""
+    state0 = init_state(cfg)
+
+    def step(windows, seeds):
+        def one(replica_seed):
+            return engine_mod.run_windows(state0, windows, cfg,
+                                          get_scheduler(scheduler),
+                                          seed=replica_seed)
+        return jax.vmap(one)(seeds)
+
+    return step
+
+
+def fleet_shardings(cfg: SimConfig, mesh: Mesh):
+    """Replicas over (pod, data); windows replicated; states: replica-sharded."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dpx = dp if len(dp) > 1 else dp[0]
+    rep = NamedSharding(mesh, P())
+    seeds = NamedSharding(mesh, P(dpx))
+
+    def state_spec(leaf_ndim):
+        return NamedSharding(mesh, P(*((dpx,) + (None,) * leaf_ndim)))
+    return rep, seeds, state_spec
+
+
+def lower_fleet(cfg: SimConfig, mesh: Mesh, scheduler: str = "greedy",
+                n_replicas: Optional[int] = None, n_windows: int = 8):
+    """Lower + compile a fleet step on a production mesh (simulator dry-run).
+
+    Replica count defaults to the data-parallel degree of the mesh (one
+    replica per data shard — the paper's '5 concurrent schedulers' scaled to
+    the mesh width).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_deg = sizes.get("data", 1) * sizes.get("pod", 1)
+    n_replicas = n_replicas or dp_deg
+    rep, seed_sh, state_spec = fleet_shardings(cfg, mesh)
+
+    E = cfg.max_events_per_window
+    R, U, C = cfg.n_resources, cfg.n_usage_stats, cfg.max_constraints
+    win = EventWindow(
+        kind=jax.ShapeDtypeStruct((n_windows, E), jnp.int8, sharding=rep),
+        slot=jax.ShapeDtypeStruct((n_windows, E), jnp.int32, sharding=rep),
+        a=jax.ShapeDtypeStruct((n_windows, E, R), jnp.float32, sharding=rep),
+        u=jax.ShapeDtypeStruct((n_windows, E, U), jnp.float32, sharding=rep),
+        prio=jax.ShapeDtypeStruct((n_windows, E), jnp.int32, sharding=rep),
+        job=jax.ShapeDtypeStruct((n_windows, E), jnp.int32, sharding=rep),
+        constraints=jax.ShapeDtypeStruct((n_windows, E, C, 3), jnp.int32,
+                                         sharding=rep),
+        attr_idx=jax.ShapeDtypeStruct((n_windows, E), jnp.int32, sharding=rep),
+        attr_val=jax.ShapeDtypeStruct((n_windows, E), jnp.int32, sharding=rep),
+        t_off=jax.ShapeDtypeStruct((n_windows, E), jnp.int32, sharding=rep),
+        n_valid=jax.ShapeDtypeStruct((n_windows,), jnp.int32, sharding=rep),
+    )
+    seeds = jax.ShapeDtypeStruct((n_replicas,), jnp.int32, sharding=seed_sh)
+
+    step = fleet_fn(cfg, scheduler, n_replicas)
+    with mesh:
+        lowered = jax.jit(step).lower(win, seeds)
+        compiled = lowered.compile()
+    return compiled

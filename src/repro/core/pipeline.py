@@ -1,0 +1,123 @@
+"""Host-side streaming pipeline — the paper's five buffering parser actors +
+the §V-B streaming alternative, in Python threads feeding the device.
+
+The 191 GB trace never fits in memory (paper §III): windows are parsed and
+tensorised on worker threads into a bounded buffer *ahead of simulation time*
+(default 30 sim-minutes / ≤1M events, the paper's limits), grouped into
+device-batches of B windows, and handed to the jitted scan while the next
+batch is being parsed — double buffering ≈ Akka actors filling buffers while
+the WorkloadGenerator drains them.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.config import SimConfig
+from repro.core import engine as engine_mod
+from repro.core.events import EventWindow, stack_windows
+from repro.core.state import SimState, init_state
+
+
+class WindowPrefetcher:
+    """Bounded-buffer producer/consumer over packed EventWindows."""
+
+    def __init__(self, cfg: SimConfig, window_iter: Iterator[EventWindow],
+                 batch_windows: int = 32):
+        self.cfg = cfg
+        self.batch = batch_windows
+        depth = max(1, min(cfg.buffer_windows // max(batch_windows, 1), 64))
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._src = window_iter
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self.events_buffered = 0
+        self._thread.start()
+
+    def _fill(self):
+        batch: List[EventWindow] = []
+        try:
+            for w in self._src:
+                batch.append(w)
+                self.events_buffered += int(w.n_valid)
+                if len(batch) == self.batch:
+                    self._q.put(stack_windows(batch))
+                    batch = []
+            if batch:
+                self._q.put(stack_windows(batch))
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        while True:
+            item = self._q.get()
+            if item is self._done:
+                return
+            yield item
+
+
+class Simulation:
+    """End-to-end driver: trace source -> prefetcher -> scanned engine.
+
+    Supports pause/snapshot/resume (paper §IV — restore is 'not implemented
+    yet' there; it is here, via core/snapshot.py) and an optional real-time
+    speed factor (sleeps so that sim-time advances at `speed_factor` x
+    wall-clock, matching the paper's 75x experiments).
+    """
+
+    def __init__(self, cfg: SimConfig, window_source: Iterator[EventWindow],
+                 scheduler: Optional[str] = None, batch_windows: int = 32,
+                 seed: Optional[int] = None):
+        self.cfg = cfg
+        self.scheduler = scheduler or cfg.scheduler
+        self.state = init_state(cfg)
+        self.prefetcher = WindowPrefetcher(cfg, window_source, batch_windows)
+        self.seed = cfg.seed if seed is None else seed
+        self.stats_rows: List[Dict[str, np.ndarray]] = []
+        self.windows_done = 0
+        self._paused = threading.Event()
+
+    def pause(self):
+        self._paused.set()
+
+    def resume(self):
+        self._paused.clear()
+
+    def run(self, max_windows: Optional[int] = None,
+            on_batch: Optional[Callable] = None) -> SimState:
+        t_start = time.time()
+        for batch in self.prefetcher:
+            while self._paused.is_set():
+                time.sleep(0.01)
+            W = batch.kind.shape[0]
+            self.state, stats = engine_mod.run_windows_jit(
+                self.state, jax.tree.map(np.asarray, batch), self.cfg,
+                self.scheduler, self.seed + self.windows_done)
+            self.windows_done += W
+            self.stats_rows.append(jax.tree.map(np.asarray, stats))
+            if on_batch is not None:
+                on_batch(self)
+            if self.cfg.speed_factor > 0:
+                sim_elapsed = self.windows_done * self.cfg.window_us / 1e6
+                target_wall = sim_elapsed / self.cfg.speed_factor
+                lag = target_wall - (time.time() - t_start)
+                if lag > 0:
+                    time.sleep(lag)
+            if max_windows is not None and self.windows_done >= max_windows:
+                break
+        jax.block_until_ready(self.state)
+        return self.state
+
+    def stats_frame(self) -> Dict[str, np.ndarray]:
+        """Concatenate per-batch stat rows into (total_windows, ...) arrays."""
+        if not self.stats_rows:
+            return {}
+        keys = self.stats_rows[0].keys()
+        return {k: np.concatenate([r[k] if np.ndim(r[k]) else r[k][None]
+                                   for r in self.stats_rows])
+                for k in keys}

@@ -1,0 +1,49 @@
+"""§V-A alternative design, implemented: pre-process the trace once into
+persisted event tensors, then replay without any parsing overhead.
+
+``precompile_trace`` runs the GCD parser once and serialises the packed
+EventWindow stack to an npz; ``replay_windows`` memory-maps it back. The
+throughput benchmark compares parse-at-runtime (the paper's main design)
+against this pre-compiled replay (the paper predicted it would trade
+flexibility for speed — EXPERIMENTS.md §Fidelity quantifies the gain).
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.config import SimConfig
+from repro.core.events import EventWindow, stack_windows
+from repro.parsers.gcd import GCDParser
+
+
+def precompile_trace(cfg: SimConfig, trace_dir: str, out_path: str,
+                     n_windows: int, start_us: int = 0) -> int:
+    parser = GCDParser(cfg, trace_dir)
+    windows = list(parser.packed_windows(n_windows, start_us=start_us))
+    stacked = stack_windows(windows)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    tmp = out_path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **{f"w/{name}": getattr(stacked, name)
+                                  for name in EventWindow._fields})
+    os.replace(tmp, out_path)
+    return len(windows)
+
+
+def replay_windows(path: str, batch: int = 32) -> Iterator[EventWindow]:
+    """Stream batches straight from the persisted tensors (zero parsing)."""
+    with np.load(path, mmap_mode="r") as z:
+        fields = {name: z[f"w/{name}"] for name in EventWindow._fields}
+        n = fields["kind"].shape[0]
+        for lo in range(0, n, batch):
+            hi = min(lo + batch, n)
+            yield EventWindow(*[np.asarray(fields[name][lo:hi])
+                                for name in EventWindow._fields])
+
+
+def replay_single_windows(path: str) -> Iterator[EventWindow]:
+    for b in replay_windows(path, batch=1):
+        yield EventWindow(*[np.asarray(v[0]) for v in b])

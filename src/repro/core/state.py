@@ -1,0 +1,99 @@
+"""Simulation state — the paper's shared ``ContextData`` reimagined as a
+structure-of-arrays pytree.
+
+AGOCS keeps workload state in lock-free TrieMaps so many actors can update it
+concurrently. On TPU the equivalent is dense slotted arrays updated with
+vectorised scatters: conflict-freedom is guaranteed up front (the host
+pipeline linearises per-slot updates within a window) instead of via CAS
+retries. Everything is fixed-shape and jit/scan-friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SimConfig
+
+TASK_EMPTY, TASK_PENDING, TASK_RUNNING = 0, 1, 2
+
+
+class SimState(NamedTuple):
+    # --- nodes ---
+    node_active: jax.Array      # (N,)   bool
+    node_total: jax.Array       # (N,R)  f32 capacity
+    node_attrs: jax.Array       # (N,K)  i32 attribute values (0 = unset)
+    node_reserved: jax.Array    # (N,R)  f32 sum of requested res of placed tasks
+    node_used: jax.Array        # (N,R)  f32 sum of actual usage of placed tasks
+    # --- tasks (slotted table) ---
+    task_state: jax.Array       # (T,)   i8
+    task_req: jax.Array         # (T,R)  f32 requested resources
+    task_usage: jax.Array       # (T,U)  f32 fine-grained usage stats
+    task_node: jax.Array        # (T,)   i32 (-1 = unplaced)
+    task_prio: jax.Array        # (T,)   i32
+    task_job: jax.Array         # (T,)   i32
+    task_constraints: jax.Array # (T,C,3) i32 (attr_idx, op, value)
+    # --- counters ---
+    window: jax.Array           # ()     i32
+    evictions: jax.Array        # ()     i32 cumulative (incl. node-removal evictions)
+    completions: jax.Array      # ()     i32
+    placements: jax.Array       # ()     i32
+    overflow_drops: jax.Array   # ()     i32 pending tasks that never fit
+
+
+def init_state(cfg: SimConfig) -> SimState:
+    N, T = cfg.max_nodes, cfg.max_tasks
+    R, U, K, C = (cfg.n_resources, cfg.n_usage_stats, cfg.n_attr_slots,
+                  cfg.max_constraints)
+    z = jnp.zeros
+    return SimState(
+        node_active=z((N,), bool),
+        node_total=z((N, R), jnp.float32),
+        node_attrs=z((N, K), jnp.int32),
+        node_reserved=z((N, R), jnp.float32),
+        node_used=z((N, R), jnp.float32),
+        task_state=z((T,), jnp.int8),
+        task_req=z((T, R), jnp.float32),
+        task_usage=z((T, U), jnp.float32),
+        task_node=jnp.full((T,), -1, jnp.int32),
+        task_prio=z((T,), jnp.int32),
+        task_job=z((T,), jnp.int32),
+        task_constraints=z((T, C, 3), jnp.int32),
+        window=z((), jnp.int32),
+        evictions=z((), jnp.int32),
+        completions=z((), jnp.int32),
+        placements=z((), jnp.int32),
+        overflow_drops=z((), jnp.int32),
+    )
+
+
+def validate_invariants(state: SimState, cfg: SimConfig) -> dict:
+    """Host-side invariant checks (tests + paused-simulation inspection):
+
+    * running tasks point at active nodes;
+    * node_reserved equals the segment-sum of requested resources of the
+      running tasks placed on each node (and never exceeds capacity);
+    * pending tasks are unplaced.
+    """
+    s = jax.tree.map(np.asarray, state)
+    running = s.task_state == TASK_RUNNING
+    pending = s.task_state == TASK_PENDING
+    problems = {}
+    if running.any():
+        nodes = s.task_node[running]
+        if (nodes < 0).any() or not s.node_active[nodes].all():
+            problems["running_on_inactive"] = int(
+                (~s.node_active[np.maximum(nodes, 0)]).sum())
+    if (s.task_node[pending] != -1).any():
+        problems["pending_placed"] = int((s.task_node[pending] != -1).sum())
+    reserved = np.zeros_like(s.node_reserved)
+    np.add.at(reserved, s.task_node[running], s.task_req[running])
+    if not np.allclose(reserved, s.node_reserved, atol=1e-3):
+        problems["reserved_mismatch"] = float(
+            np.abs(reserved - s.node_reserved).max())
+    over = s.node_reserved > s.node_total + 1e-5
+    if over.any():
+        problems["overcommit"] = int(over.sum())
+    return problems

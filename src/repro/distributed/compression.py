@@ -1,0 +1,64 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD style).
+
+Two entry points:
+
+* :func:`apply_int8_ef` — framework-level: quantize the (already reduced)
+  gradient to int8 per-tensor, dequantize, and carry the quantization residual
+  in an error-feedback buffer inside the optimizer state. This models the
+  information loss of a compressed aggregation while staying inside pjit.
+
+* :func:`compressed_psum` — shard_map-level: the wire-accurate version. Each
+  shard quantizes its local partial gradient to int8, the int8 payload (plus a
+  f32 scale) is summed across the axis, and the result is dequantized. This is
+  what a 1000-node deployment would run; it is exercised by tests on a host
+  mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def apply_int8_ef(grads, opt_state):
+    """Returns (dequantized grads, opt_state with updated ef buffers)."""
+    ef = opt_state.ef
+    if ef is None:
+        ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quantize(corrected)
+        deq = _dequantize(q, s)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return deq, opt_state._replace(ef=new_ef)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-over-the-wire psum (inside shard_map): quantize, sum int32, dequant.
+
+    The max-scale is agreed via one scalar psum; payload is int8 (4x smaller
+    than f32). Accumulation in int32 avoids overflow up to ~16M shards.
+    """
+    local_scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    scale = jax.lax.pmax(local_scale, axis_name)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,57 @@
+"""Sharding trees: map logical-axis trees to NamedSharding trees for params,
+optimizer state, batches and serving caches."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.distributed.sharding import make_rules, make_sharding, resolve_spec
+from repro.models import model
+from repro.train import optim
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and (
+        len(x) == 0 or isinstance(x[0], (str, type(None))))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules) -> Any:
+    return jax.tree.map(lambda ax: make_sharding(ax, mesh, rules),
+                        axes_tree, is_leaf=_is_axes_leaf)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules) -> Any:
+    return tree_shardings(model.param_logical_axes(cfg), mesh, rules)
+
+
+def opt_shardings(param_sh, mesh: Mesh, with_ef: bool = False):
+    scalar = NamedSharding(mesh, P())
+    ef = jax.tree.map(lambda s: s, param_sh) if with_ef else None
+    return optim.OptState(step=scalar, mu=param_sh, nu=param_sh, ef=ef)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, rules) -> Dict[str, NamedSharding]:
+    tok = make_sharding(("batch", "seq") + (("codebook",) if cfg.n_codebooks > 1 else ()),
+                        mesh, rules)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.n_prefix:
+        out["vision_embeds"] = make_sharding(("batch", "seq", "act_embed"), mesh, rules)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, rules) -> Any:
+    return tree_shardings(model.cache_logical_axes(cfg), mesh, rules)
+
+
+def choose_serve_mode(shape: ShapeConfig, mesh: Mesh) -> str:
+    """B=1 long-context decode can't shard the batch: shard the KV-cache
+    sequence dim over 'data' instead."""
+    dp = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for ax in ("pod", "data"):
+        dp *= sizes.get(ax, 1)
+    return "serve" if shape.global_batch % dp == 0 else "serve_seq"

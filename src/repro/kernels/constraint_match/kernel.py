@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: tiled (tasks x nodes) constraint-match + best-fit score.
+
+TPU adaptation of AGOCS's constraint hot loop (paper §VIII): instead of
+pointer-chasing per-task constraint lists, the (P, N) eligibility/score
+matrix is computed in 128x128 MXU-aligned tiles with the node tile's
+attributes, capacities and reservations resident in VMEM.
+
+Attribute gathers are reformulated as one-hot matmuls (TPU has no efficient
+per-lane gather; the MXU eats one-hots for breakfast): for constraint column
+c, ``got[p, n] = onehot(attr_idx[p]) @ attrs[n, :]^T``. Attribute values stay
+exact in f32 up to 2^24, which covers the obfuscated GCD attribute space.
+
+Layout notes:
+* constraints arrive as three (P, C) int32 planes (idx / op / val);
+* node_active is folded into node_total (inactive rows get capacity -1, which
+  can never fit a non-negative request) by ops.py, keeping the kernel branch-
+  free;
+* R (resource columns) and C (constraint slots) are compile-time constants,
+  unrolled in the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.events import OP_EQ, OP_GT, OP_LT, OP_NE
+
+NEG_INF = float("-inf")
+
+
+def _kernel(req_ref, cidx_ref, cop_ref, cval_ref,
+            total_ref, reserved_ref, attrs_ref,
+            out_ref, *, n_res: int, n_cons: int, n_attr: int):
+    req = req_ref[...]                    # (TP, R) f32
+    total = total_ref[...]                # (TN, R) f32
+    reserved = reserved_ref[...]          # (TN, R) f32
+    attrs = attrs_ref[...].astype(jnp.float32)   # (TN, K)
+
+    free = total - reserved               # (TN, R)
+
+    # resource fit: all R columns (unrolled) — (TP, TN)
+    fit = jnp.ones(out_ref.shape, jnp.bool_)
+    for r in range(n_res):
+        fit &= req[:, r][:, None] <= free[:, r][None, :] + 1e-9
+
+    # constraints: one-hot gather + compare per constraint slot (unrolled)
+    cidx = cidx_ref[...]                  # (TP, C) i32
+    cop = cop_ref[...]
+    cval = cval_ref[...]
+    karange = jax.lax.broadcasted_iota(jnp.int32, (req.shape[0], n_attr), 1)
+    ok = jnp.ones(out_ref.shape, jnp.bool_)
+    for c in range(n_cons):
+        onehot = (karange == cidx[:, c][:, None]).astype(jnp.float32)  # (TP, K)
+        got = jax.lax.dot_general(onehot, attrs, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (TP, TN)
+        val = cval[:, c][:, None].astype(jnp.float32)
+        op = cop[:, c][:, None]
+        ok_c = jnp.where(op == OP_EQ, got == val,
+                jnp.where(op == OP_NE, got != val,
+                jnp.where(op == OP_LT, got < val,
+                jnp.where(op == OP_GT, got > val, True))))
+        ok &= ok_c
+
+    # best-fit score: negated normalised leftover
+    score = jnp.zeros(out_ref.shape, jnp.float32)
+    for r in range(n_res):
+        denom = jnp.maximum(total[:, r], 1e-6)
+        leftover = (free[:, r][None, :] - req[:, r][:, None]) / denom[None, :]
+        score -= leftover
+    out_ref[...] = jnp.where(fit & ok, score, NEG_INF)
+
+
+def constraint_match_pallas(req, cidx, cop, cval, total, reserved, attrs,
+                            *, tile_p: int = 128, tile_n: int = 128,
+                            interpret: bool = True):
+    P, R = req.shape
+    N = total.shape[0]
+    C = cidx.shape[1]
+    K = attrs.shape[1]
+    assert P % tile_p == 0 and N % tile_n == 0, (P, N, tile_p, tile_n)
+
+    grid = (P // tile_p, N // tile_n)
+    kernel = functools.partial(_kernel, n_res=R, n_cons=C, n_attr=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_p, R), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_p, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_p, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_p, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, R), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_n, R), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_n, K), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_p, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, N), jnp.float32),
+        interpret=interpret,
+    )(req, cidx, cop, cval, total, reserved, attrs)

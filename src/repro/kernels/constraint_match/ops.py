@@ -1,0 +1,49 @@
+"""jit'd wrapper for the constraint-match kernel: padding, active-node
+folding, kernel/ref dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.constraint_match.kernel import constraint_match_pallas
+from repro.kernels.constraint_match.ref import constraint_match_ref
+
+
+def _pad_to(x: jax.Array, n: int, axis: int = 0, fill=0):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
+                                             "tile_p", "tile_n"))
+def constraint_match(req, cons, node_total, node_reserved, node_attrs,
+                     node_active, *, use_kernel: bool = False,
+                     interpret: bool = True, tile_p: int = 128,
+                     tile_n: int = 128) -> jax.Array:
+    """Dispatch to the Pallas kernel (TPU target; interpret=True on CPU) or
+    the pure-jnp reference. Shapes: req (P,R), cons (P,C,3), node_* (N,...).
+    Returns (P, N) f32 scores with -inf for infeasible pairs."""
+    if not use_kernel:
+        return constraint_match_ref(req, cons, node_total, node_reserved,
+                                    node_attrs, node_active)
+
+    P, N = req.shape[0], node_total.shape[0]
+    Pp = ((P + tile_p - 1) // tile_p) * tile_p
+    Np = ((N + tile_n - 1) // tile_n) * tile_n
+
+    # fold node_active into capacity: inactive nodes can never fit any task
+    total = jnp.where(node_active[:, None], node_total, -1.0)
+    scores = constraint_match_pallas(
+        _pad_to(req, Pp),
+        _pad_to(cons[:, :, 0], Pp), _pad_to(cons[:, :, 1], Pp),
+        _pad_to(cons[:, :, 2], Pp),
+        _pad_to(total, Np, fill=-1.0), _pad_to(node_reserved, Np),
+        _pad_to(node_attrs, Np),
+        tile_p=tile_p, tile_n=tile_n, interpret=interpret)
+    return scores[:P, :N]

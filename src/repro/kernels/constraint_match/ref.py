@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the constraint-match kernel (shares the real
+implementation with core/constraints.py so the simulator and the kernel are
+validated against a single source of truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constraints import placement_scores
+
+
+def constraint_match_ref(req: jax.Array, cons: jax.Array,
+                         node_total: jax.Array, node_reserved: jax.Array,
+                         node_attrs: jax.Array, node_active: jax.Array
+                         ) -> jax.Array:
+    """req (P,R), cons (P,C,3), node_* (N,...) -> scores (P,N) f32.
+
+    -inf marks infeasible (task, node) pairs; elsewhere the best-fit score.
+    """
+    return placement_scores(req, cons, node_total, node_reserved,
+                            node_attrs, node_active)

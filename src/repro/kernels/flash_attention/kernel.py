@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: causal flash attention (online softmax), 128x128 tiles.
+
+Grid is (B*H, n_q_blocks, n_kv_blocks) with the innermost kv dimension
+sequential ('arbitrary'): the (BQ, D) accumulator, running max m and running
+denominator l live in VMEM scratch that persists across the kv grid steps —
+the classic FlashAttention-2 dataflow mapped onto the MXU.
+
+On a real TPU the fully-masked kv blocks (j > i for causal) would be skipped
+with a custom grid; here they are computed-and-masked, which only affects
+dry-run FLOP accounting (noted in EXPERIMENTS.md), not correctness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)          # (BK, D)
+    v = v_ref[0].astype(jnp.float32)          # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (BQ, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                     # (BQ, BK)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, D) (batch*heads flattened, KV already head-expanded)."""
+    BH, S, D = q.shape
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    grid = (BH, S // bq, S // bk)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               block_q=bq, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""jit'd wrapper: (B, S, H, D) layout handling + kernel/ref dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "use_kernel",
+                                             "interpret", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    use_kernel: bool = True, interpret: bool = True,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q,k,v: (B, S, H, D) with KV heads already expanded to H."""
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    B, S, H, D = q.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out = flash_attention_pallas(fold(q), fold(k), fold(v), causal=causal,
+                                 scale=scale, block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

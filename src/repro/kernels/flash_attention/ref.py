@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: causal/full softmax attention in float32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None) -> jax.Array:
+    """q,k,v: (B, S, H, D) -> (B, S, H, D). KV heads already expanded."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,35 @@
+"""jit'd wrapper for the fused-CE kernel: padding + dispatch + mean helper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_ce.kernel import fused_ce_pallas
+from repro.kernels.fused_ce.ref import fused_ce_ref
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size", "use_kernel",
+                                             "interpret", "block_t", "block_v"))
+def fused_ce(x: jax.Array, w: jax.Array, labels: jax.Array, vocab_size: int,
+             *, use_kernel: bool = True, interpret: bool = True,
+             block_t: int = 128, block_v: int = 512) -> jax.Array:
+    """Per-token NLL of softmax(x @ w.T) at `labels`. (T,d),(Vp,d),(T,)->(T,)."""
+    if not use_kernel:
+        return fused_ce_ref(x, w, labels, vocab_size)
+    T = x.shape[0]
+    bt = min(block_t, T)
+    Tp = ((T + bt - 1) // bt) * bt
+    if Tp != T:
+        x = jnp.pad(x, ((0, Tp - T), (0, 0)))
+        labels = jnp.pad(labels, (0, Tp - T), constant_values=-1)
+    nll = fused_ce_pallas(x, w, labels, vocab_size, block_t=bt,
+                          block_v=block_v, interpret=interpret)
+    return nll[:T]
+
+
+def mean_ce(x, w, labels, vocab_size, **kw) -> jax.Array:
+    nll = fused_ce(x, w, labels, vocab_size, **kw)
+    valid = (labels >= 0).sum()
+    return nll.sum() / jnp.maximum(valid, 1)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: dense projection + cross-entropy, per-token NLL."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_ce_ref(x: jax.Array, w: jax.Array, labels: jax.Array,
+                 vocab_size: int) -> jax.Array:
+    """x: (T, d); w: (Vp, d); labels: (T,) (<0 = ignore) -> nll (T,) f32."""
+    logits = jnp.einsum("td,vd->tv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    logits = jnp.where(jnp.arange(w.shape[0])[None, :] < vocab_size,
+                       logits, -1e30)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    return jnp.where(valid, lse - picked, 0.0)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the segment-usage kernel: masking, padding, dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_usage.kernel import segment_usage_pallas
+from repro.kernels.segment_usage.ref import segment_usage_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "use_kernel",
+                                             "interpret", "tile_t"))
+def segment_usage(task_node: jax.Array, values: jax.Array, mask: jax.Array,
+                  n_nodes: int, *, use_kernel: bool = False,
+                  interpret: bool = True, tile_t: int = 1024) -> jax.Array:
+    """Sum `values` rows into their task's node row. (T,),(T,V),(T,)->(N,V)."""
+    if not use_kernel:
+        return segment_usage_ref(task_node, values, mask, n_nodes)
+    T = task_node.shape[0]
+    tile = min(tile_t, T)
+    Tp = ((T + tile - 1) // tile) * tile
+    idx = jnp.where(mask & (task_node >= 0), task_node, n_nodes)  # -> dropped
+    if Tp != T:
+        idx = jnp.pad(idx, (0, Tp - T), constant_values=n_nodes)
+        values = jnp.pad(values, ((0, Tp - T), (0, 0)))
+    return segment_usage_pallas(idx, values, n_nodes, tile_t=tile,
+                                interpret=interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: per-node accumulation of per-task values (segment-sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_usage_ref(task_node: jax.Array, values: jax.Array,
+                      mask: jax.Array, n_nodes: int) -> jax.Array:
+    """task_node (T,) i32 (may be -1), values (T,V) f32, mask (T,) bool
+    -> (N, V) f32 sums over tasks placed on each node."""
+    idx = jnp.where(mask & (task_node >= 0), task_node, n_nodes)
+    out = jnp.zeros((n_nodes + 1, values.shape[1]), jnp.float32)
+    out = out.at[idx].add(values.astype(jnp.float32))
+    return out[:n_nodes]

@@ -1,0 +1,657 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks at
+# first init). REPRO_DRYRUN_DEVICES overrides for CI-scale self-tests.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh, prove it fits, and extract roofline inputs.
+
+Methodology (see EXPERIMENTS.md §Dry-run):
+
+* The FULL step function (train_step / prefill / decode_step) is lowered and
+  compiled with rolled layer/microbatch scans. Its successful compile +
+  ``memory_analysis()`` are the pass/fail gate and the bytes-per-device
+  numbers. XLA's cost analysis counts a while-loop body exactly ONCE, so the
+  full program's FLOPs under-count scanned work.
+
+* Therefore per-iteration costs come from PROBE programs — the layer body
+  (one pattern repeat, microbatch-sized activations, inner scans fully
+  unrolled, same shardings, remat applied), the embed+head+loss, and the
+  optimizer update — whose cost_analysis() and collective bytes are exact.
+  Totals: train = R*M*layer + M*head + opt;  prefill/decode = R*layer + head.
+
+Artifacts: one JSON per cell under experiments/dryrun/<mesh>/.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, TrainConfig, ShapeConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import placement
+from repro.distributed.sharding import (axis_rules, make_rules, make_sharding,
+                                        resolve_spec)
+from repro.launch import hardware
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models import runtime_flags
+from repro.serve import engine as serve_engine
+from repro.train import optim
+from repro.train.step import make_train_step
+
+ARTIFACT_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 "../../../experiments/dryrun"))
+
+# --set overrides applied to every ModelConfig (perf-variant runs)
+CFG_OVERRIDES: Dict[str, Any] = {}
+
+
+def get_cfg(arch: str):
+    import dataclasses
+    cfg = get_config(arch)
+    if CFG_OVERRIDES:
+        cfg = dataclasses.replace(cfg, **CFG_OVERRIDES)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct helpers
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(shape_tree, sharding_tree):
+    return jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                        shape_tree, sharding_tree)
+
+
+def param_specs(cfg, mesh, rules):
+    shapes = jax.eval_shape(lambda k: model.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    return _with_shardings(shapes, placement.param_shardings(cfg, mesh, rules))
+
+
+def _unstack(tree):
+    """Remove the leading repeat dim from every leaf (scan-body view)."""
+    return jax.tree.map(lambda s: _sds(s.shape[1:], s.dtype,
+                                       getattr(s, "sharding", None)), tree)
+
+
+def _block_specs(cfg, mesh, rules):
+    """Per-position block params as the scan body sees them (no repeat dim)."""
+    full = param_specs(cfg, mesh, rules)
+    axes = model.param_logical_axes(cfg)["blocks"]
+    blocks = []
+    for pos_shapes, pos_axes in zip(full["blocks"], axes):
+        def drop(s, ax):
+            sh = make_sharding(ax[1:], mesh, rules)   # drop 'stack'
+            return _sds(s.shape[1:], s.dtype, sh)
+        blocks.append(jax.tree.map(drop, pos_shapes, pos_axes,
+                                   is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+    return tuple(blocks)
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> Dict[str, Any]:
+    """Build the full-program spec for one (arch, shape) cell: the callable,
+    its ShapeDtypeStruct args, donation and sharding rules."""
+    cfg = get_cfg(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        rules = make_rules(mesh, "train", cfg)
+        tc = TrainConfig(num_microbatches=shape.num_microbatches)
+        step = make_train_step(cfg, tc)
+        params = param_specs(cfg, mesh, rules)
+        opt_shapes = jax.eval_shape(optim.init_opt_state, params)
+        opt = _with_shardings(
+            opt_shapes, placement.opt_shardings(
+                placement.param_shardings(cfg, mesh, rules), mesh))
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+        bsh = placement.batch_shardings(cfg, mesh, rules)
+        batch = {"tokens": _sds(tok_shape, jnp.int32, bsh["tokens"]),
+                 "labels": _sds(tok_shape, jnp.int32, bsh["labels"])}
+        if cfg.n_prefix:
+            batch["vision_embeds"] = _sds((B, cfg.n_prefix, cfg.d_model),
+                                          jnp.bfloat16, bsh["vision_embeds"])
+        rng = _sds((2,), jnp.uint32, NamedSharding(mesh, P()))
+        return dict(fn=step, args=(params, opt, batch, rng),
+                    donate=(0, 1), rules=rules, cfg=cfg, shape=shape, tc=tc)
+
+    if shape.kind == "prefill":
+        rules = make_rules(mesh, "prefill", cfg)  # train layout + cache sharding
+        step = serve_engine.make_prefill_step(cfg, max_seq=S + cfg.n_prefix)
+        params = param_specs(cfg, mesh, rules)
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+        bsh = placement.batch_shardings(cfg, mesh, rules)
+        args = [params, _sds(tok_shape, jnp.int32, bsh["tokens"])]
+        if cfg.n_prefix:
+            args.append(_sds((B, cfg.n_prefix, cfg.d_model), jnp.bfloat16,
+                             bsh["vision_embeds"]))
+        return dict(fn=step, args=tuple(args), donate=(), rules=rules,
+                    cfg=cfg, shape=shape, tc=None)
+
+    # decode
+    mode = placement.choose_serve_mode(shape, mesh)
+    rules = make_rules(mesh, mode, cfg)
+    step = serve_engine.make_decode_step(cfg)
+    params = param_specs(cfg, mesh, rules)
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(cfg, B, S, jnp.bfloat16))
+    cache = _with_shardings(cache_shapes,
+                            placement.cache_shardings(cfg, mesh, rules))
+    tokens = _sds(tok_shape, jnp.int32, make_sharding(
+        ("batch", "seq") + (("codebook",) if cfg.n_codebooks > 1 else ()),
+        mesh, rules))
+    cache_len = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return dict(fn=step, args=(params, tokens, cache, cache_len),
+                donate=(2,), rules=rules, cfg=cfg, shape=shape, tc=None)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<sig>[^=]*?)\s*"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(pred|[a-z]+\d+(?:e\d+m\d+(?:fn)?)?)\[([0-9,]*)\]")
+
+
+def _bytes_of_sig(sig: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = hardware.DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output-signature bytes of every collective in per-device HLO."""
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        b = _bytes_of_sig(m.group("sig"))
+        s = stats.setdefault(kind, {"count": 0, "bytes": 0})
+        s["count"] += 1
+        s["bytes"] += b
+    return stats
+
+
+def _scale_coll(stats: Dict[str, Dict[str, float]], k: float
+                ) -> Dict[str, Dict[str, float]]:
+    return {kk: {"count": v["count"] * k, "bytes": v["bytes"] * k}
+            for kk, v in stats.items()}
+
+
+def _add_coll(*all_stats) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for stats in all_stats:
+        for k, v in stats.items():
+            s = out.setdefault(k, {"count": 0, "bytes": 0})
+            s["count"] += v["count"]
+            s["bytes"] += v["bytes"]
+    return out
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   coll_stats: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    wire = sum(hardware.COLLECTIVE_WIRE_FACTOR[k] * v["bytes"]
+               for k, v in coll_stats.items())
+    return {
+        "compute_s": flops_per_dev / hardware.PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes_per_dev / hardware.HBM_BW,
+        "collective_s": wire / hardware.ICI_BW,
+        "collective_wire_bytes_per_dev": wire,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cost probes
+# ---------------------------------------------------------------------------
+
+def _analyze(fn, args, mesh, rules, donate=(), out_shardings=None,
+             unroll=None):
+    # out_shardings matter: without them XLA may replicate probe outputs
+    # (e.g. per-layer parameter gradients), inflating collective bytes far
+    # beyond what the real (fully sharded) training step performs.
+    if out_shardings is not None:
+        jfn = jax.jit(fn, donate_argnums=donate, out_shardings=out_shardings)
+    else:
+        jfn = jax.jit(fn, donate_argnums=donate)
+    with mesh, axis_rules(mesh, rules), runtime_flags.scan_unroll(
+            **(unroll or {})):
+        compiled = jfn.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": colls,
+    }
+
+
+def _res_combine(base, body, factor):
+    """base + factor * body, fieldwise (incl. per-kind collective stats)."""
+    out = {"flops": base["flops"] + factor * body["flops"],
+           "bytes": base["bytes"] + factor * body["bytes"]}
+    colls = {k: dict(v) for k, v in base["collectives"].items()}
+    for k, v in body["collectives"].items():
+        s = colls.setdefault(k, {"count": 0, "bytes": 0})
+        s["count"] += factor * v["count"]
+        s["bytes"] += factor * v["bytes"]
+    out["collectives"] = colls
+    return out
+
+
+def _res_diff(a, b, denom):
+    """(a - b) / denom fieldwise, clamped at 0 (per-chunk body cost)."""
+    out = {"flops": max(a["flops"] - b["flops"], 0.0) / denom,
+           "bytes": max(a["bytes"] - b["bytes"], 0.0) / denom}
+    colls = {}
+    for k in set(a["collectives"]) | set(b["collectives"]):
+        av = a["collectives"].get(k, {"count": 0, "bytes": 0})
+        bv = b["collectives"].get(k, {"count": 0, "bytes": 0})
+        colls[k] = {"count": max(av["count"] - bv["count"], 0) / denom,
+                    "bytes": max(av["bytes"] - bv["bytes"], 0) / denom}
+    out["collectives"] = colls
+    return out
+
+
+def _inner_scans(cfg, shape: ShapeConfig) -> Dict[str, int]:
+    """Trip counts of inner scans present in one layer-probe invocation."""
+    if shape.kind == "decode":
+        return {}
+    S_act = shape.seq_len + (cfg.n_prefix or 0)
+    scans = {}
+    if cfg.has_mamba():
+        scans["ssd"] = max(S_act // cfg.ssm_chunk, 1)
+    if cfg.has_attention() and S_act > 8192 and S_act % 1024 == 0:
+        scans["attn_chunk"] = S_act // 1024
+    return {k: v for k, v in scans.items() if v > 1}
+
+
+def _probe_scanned(fn, args, mesh, rules, cfg, shape, donate=(),
+                   out_shardings=None):
+    """Unroll-differencing: res(u) = outer + u*body per scan kind;
+    total = res(1) + sum_kind (trip-1) * body_kind."""
+    base = _analyze(fn, args, mesh, rules, donate=donate,
+                    out_shardings=out_shardings)
+    total = base
+    for kind, trips in _inner_scans(cfg, shape).items():
+        u = min(4, trips)
+        if u <= 1:
+            continue
+        res_u = _analyze(fn, args, mesh, rules, donate=donate,
+                         out_shardings=out_shardings, unroll={kind: u})
+        body = _res_diff(res_u, base, u - 1)
+        total = _res_combine(total, body, trips - 1)
+    return total
+
+
+def _sharding_of(tree):
+    return jax.tree.map(lambda s: s.sharding, tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def probe_costs(cfg, shape: ShapeConfig, mesh, rules,
+                tc: Optional[TrainConfig]) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    M = shape.num_microbatches if shape.kind == "train" else 1
+    Bm = B // M
+    d = cfg.d_model
+    S_act = 1 if shape.kind == "decode" else S + (cfg.n_prefix or 0)
+    act_dtype = jnp.dtype(cfg.dtype)
+
+    blocks = _block_specs(cfg, mesh, rules)
+
+    def _bf16_params(tree):
+        """bf16_weight_gather: the layer stack sees bf16 weights (the cast
+        happens before the FSDP gathers in train_step)."""
+        if not getattr(cfg, "bf16_weight_gather", False):
+            return tree
+        return jax.tree.map(
+            lambda s: _sds(s.shape, jnp.bfloat16 if (s.dtype == jnp.float32
+                           and len(s.shape) >= 2) else s.dtype,
+                           getattr(s, "sharding", None)),
+            tree, is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+    blocks = _bf16_params(blocks)
+    x_sh = make_sharding(("batch", "seq", "act_embed"), mesh, rules)
+    pos_sh = make_sharding(("batch", "seq"), mesh, rules)
+    x = _sds((Bm, S_act, d), act_dtype, x_sh)
+    positions = _sds((Bm, S_act), jnp.int32, pos_sh)
+
+    probes: Dict[str, Any] = {}
+
+    if shape.kind == "train":
+        def layer_loss(block_r, xx):
+            y, aux = model.single_repeat(block_r, cfg, xx, _pos_arr(Bm, S_act))
+            return jnp.sum(y.astype(jnp.float32)) * 0.0 + \
+                jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+        layer_fn = model._remat(
+            lambda br, xx: model.single_repeat(br, cfg, xx, _pos_arr(Bm, S_act)),
+            cfg.remat_policy)
+
+        def layer_grad(block_r, xx):
+            def f(br, x2):
+                y, aux = layer_fn(br, x2)
+                return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+            return jax.grad(f, argnums=(0, 1))(block_r, xx)
+
+        probes["layer"] = _probe_scanned(
+            layer_grad, (blocks, x), mesh, rules, cfg, shape,
+            out_shardings=(_sharding_of(blocks), x_sh))
+
+        # embed + head + loss (grad)
+        hp = _bf16_params({k: v for k, v in param_specs(cfg, mesh, rules).items()
+                           if k != "blocks"})
+        tok_shape = (Bm, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (Bm, S)
+        toks = _sds(tok_shape, jnp.int32, make_sharding(
+            ("batch", "seq") + (("codebook",) if cfg.n_codebooks > 1 else ()),
+            mesh, rules))
+        hid = _sds((Bm, S, d), act_dtype, x_sh)
+
+        def head_grad(p, tk, lb, h):
+            return jax.grad(
+                lambda pp: model.head_and_embed_loss(pp, cfg, tk, lb, h))(p)
+
+        probes["head"] = _analyze(head_grad, (hp, toks, toks, hid), mesh,
+                                  rules, out_shardings=_sharding_of(hp))
+
+        # optimizer update
+        params = param_specs(cfg, mesh, rules)
+        opt_shapes = jax.eval_shape(optim.init_opt_state, params)
+        opt = _with_shardings(
+            opt_shapes, placement.opt_shardings(
+                placement.param_shardings(cfg, mesh, rules), mesh))
+        grads = params
+
+        def opt_fn(p, g, o):
+            return optim.adamw_update(p, g, o, tc)
+
+        scalar = NamedSharding(mesh, P())
+        probes["opt"] = _analyze(
+            opt_fn, (params, grads, opt), mesh, rules, donate=(0, 2),
+            out_shardings=(_sharding_of(params), _sharding_of(opt),
+                           {"grad_norm": scalar, "lr": scalar}))
+        scale = {"layer": cfg.n_repeats * M, "head": M, "opt": 1}
+
+    elif shape.kind == "prefill":
+        def layer_fwd(block_r, xx):
+            y, _ = model.single_repeat(block_r, cfg, xx, _pos_arr(Bm, S_act))
+            return y
+        probes["layer"] = _probe_scanned(layer_fwd, (blocks, x), mesh, rules,
+                                         cfg, shape, out_shardings=x_sh)
+
+        hp = {k: v for k, v in param_specs(cfg, mesh, rules).items()
+              if k != "blocks"}
+        hid1 = _sds((Bm, 1, d), act_dtype, x_sh)
+
+        def head_fwd(p, h):
+            from repro.models.layers import rms_norm
+            hh = rms_norm(h, p["final_norm"], cfg.norm_eps)
+            return model.logits_from_hidden(p, cfg, hh)
+
+        logit_sh = make_sharding(("batch", "seq", None, "vocab"), mesh, rules)
+        probes["head"] = _analyze(head_fwd, (hp, hid1), mesh, rules,
+                                  out_shardings=logit_sh)
+        scale = {"layer": cfg.n_repeats, "head": 1}
+
+    else:  # decode
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(cfg, B, S, jnp.bfloat16))
+        cache_ax = model.cache_logical_axes(cfg)
+        cache_r = jax.tree.map(
+            lambda s, ax: _sds(s.shape[1:], s.dtype,
+                               make_sharding(ax[1:], mesh, rules)),
+            cache_shapes, cache_ax,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        x1 = _sds((B, 1, d), act_dtype, x_sh)
+        clen = _sds((), jnp.int32, NamedSharding(mesh, P()))
+
+        def layer_dec(block_r, xx, cr, cl):
+            y, nc = model.single_repeat_decode(block_r, cfg, xx, cr, cl)
+            return y, nc
+
+        probes["layer"] = _analyze(
+            layer_dec, (blocks, x1, cache_r, clen), mesh, rules, donate=(2,),
+            out_shardings=(x_sh, _sharding_of(cache_r)))
+
+        hp = {k: v for k, v in param_specs(cfg, mesh, rules).items()
+              if k != "blocks"}
+
+        def head_fwd(p, h):
+            from repro.models.layers import rms_norm
+            hh = rms_norm(h, p["final_norm"], cfg.norm_eps)
+            return model.logits_from_hidden(p, cfg, hh)
+
+        logit_sh = make_sharding(("batch", "seq", None, "vocab"), mesh, rules)
+        probes["head"] = _analyze(head_fwd, (hp, x1), mesh, rules,
+                                  out_shardings=logit_sh)
+        scale = {"layer": cfg.n_repeats, "head": 1}
+
+    total_flops = sum(probes[k]["flops"] * scale[k] for k in probes)
+    total_bytes = sum(probes[k]["bytes"] * scale[k] for k in probes)
+    total_colls = _add_coll(*[_scale_coll(probes[k]["collectives"], scale[k])
+                              for k in probes])
+    return {"probes": probes, "scale": scale, "flops": total_flops,
+            "bytes": total_bytes, "collectives": total_colls}
+
+
+def _pos_arr(B, S):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+# ---------------------------------------------------------------------------
+# Per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: str, save_hlo: bool = False,
+             skip_probes: bool = False) -> Dict[str, Any]:
+    cfg = get_cfg(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.is_subquadratic():
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "skipped",
+                  "reason": "pure full-attention arch; 512K dense-attention "
+                            "decode excluded by design (DESIGN.md §4)"}
+        _write(out_dir, arch, shape_name, result)
+        return result
+
+    t0 = time.time()
+    spec = input_specs(arch, shape_name, mesh)
+    fn = jax.jit(spec["fn"], donate_argnums=spec["donate"])
+    with mesh, axis_rules(mesh, spec["rules"]):
+        lowered = fn.lower(*spec["args"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    full_cost = compiled.cost_analysis() or {}
+    full_colls = parse_collectives(compiled.as_text())
+
+    mem_dict = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_dict[attr] = int(v)
+    live = (mem_dict.get("argument_size_in_bytes", 0)
+            + mem_dict.get("output_size_in_bytes", 0)
+            + mem_dict.get("temp_size_in_bytes", 0)
+            - mem_dict.get("alias_size_in_bytes", 0))
+
+    if save_hlo:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}__{shape_name}.hlo"), "w") as f:
+            f.write(compiled.as_text())
+    del compiled, lowered
+
+    # probe-based totals (exact per-iteration costs x analytic trip counts)
+    t1 = time.time()
+    if skip_probes:
+        probe = {"flops": float(full_cost.get("flops", 0.0)),
+                 "bytes": float(full_cost.get("bytes accessed", 0.0)),
+                 "collectives": full_colls, "probes": {}, "scale": {}}
+    else:
+        probe = probe_costs(cfg, shape, mesh, spec["rules"], spec.get("tc"))
+    t_probe = time.time() - t1
+
+    n_chips = mesh.devices.size
+    terms = roofline_terms(probe["flops"], probe["bytes"], probe["collectives"])
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6 * cfg.active_param_count() * tokens / n_chips
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2 * cfg.active_param_count() * tokens / n_chips
+    else:
+        tokens = shape.global_batch
+        mf = 2 * cfg.active_param_count() * tokens / n_chips
+
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    mf_time = mf / hardware.PEAK_FLOPS_BF16
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": round(t_probe, 2),
+        "memory": mem_dict,
+        "live_bytes_per_dev": live,
+        "fits_hbm": bool(live <= hardware.HBM_BYTES),
+        "full_program_cost_once": {
+            k: float(v) for k, v in full_cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals")},
+        "full_program_collectives_once": full_colls,
+        "probe": probe,
+        "collectives": probe["collectives"],
+        "roofline": terms,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": probe["flops"],
+        "useful_flops_ratio": (mf / probe["flops"]) if probe["flops"] else None,
+        "roofline_fraction": (mf_time / bound) if bound else None,
+        "dominant": max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: terms[k]),
+    }
+    _write(out_dir, arch, shape_name, result)
+    return result
+
+
+def _write(out_dir: str, arch: str, shape_name: str, result: Dict[str, Any]):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch}__{shape_name}.json"), "w") as f:
+        json.dump(result, f, indent=2)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh as 'data,model' or 'pod,data,model'")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true",
+                    help="compile-gate only (multi-pod pass)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override, e.g. --set chunked_ce=True")
+    args = ap.parse_args(argv)
+
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        if v in ("True", "False"):
+            CFG_OVERRIDES[k] = v == "True"
+        else:
+            try:
+                CFG_OVERRIDES[k] = int(v)
+            except ValueError:
+                CFG_OVERRIDES[k] = v
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, names)
+        mesh_name = "x".join(map(str, dims))
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+
+    out_dir = args.out or os.path.join(ARTIFACT_DIR, mesh_name)
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    failures = 0
+    for arch, shape_name in cells:
+        try:
+            r = run_cell(arch, shape_name, mesh, mesh_name, out_dir,
+                         save_hlo=args.save_hlo, skip_probes=args.skip_probes)
+            if r["status"] == "ok":
+                t = r["roofline"]
+                rf = r.get("roofline_fraction")
+                print(f"[ok]   {arch:24s} {shape_name:12s} {mesh_name:8s} "
+                      f"compile={r['compile_s']:6.1f}s "
+                      f"live={r['live_bytes_per_dev']/2**30:6.2f}GiB "
+                      f"fits={int(r['fits_hbm'])} "
+                      f"c={t['compute_s']*1e3:9.2f}ms m={t['memory_s']*1e3:9.2f}ms "
+                      f"coll={t['collective_s']*1e3:9.2f}ms "
+                      f"dom={r['dominant'][:-2]:10s} "
+                      f"roofline={rf if rf is None else round(rf,3)}",
+                      flush=True)
+            else:
+                print(f"[skip] {arch:24s} {shape_name:12s} {r['reason']}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures += 1
+            print(f"[FAIL] {arch:24s} {shape_name:12s} {type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc()
+            _write(out_dir, arch, shape_name,
+                   {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "error", "error": f"{type(e).__name__}: {e}"})
+    print(f"dryrun complete: {len(cells) - failures}/{len(cells)} cells ok",
+          flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)

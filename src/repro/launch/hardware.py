@@ -1,0 +1,31 @@
+"""TPU v5e hardware model used for the roofline analysis.
+
+The container is CPU-only; v5e is the *target*. These constants turn the
+dry-run's compiled-HLO statistics into roofline seconds.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~4 links/chip on a v5e torus)
+HBM_BYTES = 16 * 1024**3      # 16 GiB per chip
+
+# Effective wire-bytes multiplier per collective kind (ring algorithms):
+#   all-reduce moves ~2x the payload ((n-1)/n reduce-scatter + (n-1)/n all-gather),
+#   the others move ~1x. Payload accounting (see launch/dryrun.py) uses the
+#   post-SPMD per-device HLO, so shapes are already per-shard.
+COLLECTIVE_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}

@@ -1,0 +1,138 @@
+"""AGOCS simulation driver — the paper's stand-alone simulator server.
+
+  # synthetic GCD-schema trace, 12.5K-node cell scaled down:
+  PYTHONPATH=src python -m repro.launch.simulate --nodes 256 --jobs 400 \
+      --windows 200 --scheduler greedy
+
+  # from a GCD-format trace directory (real or generated):
+  PYTHONPATH=src python -m repro.launch.simulate --trace-dir /data/gcd \
+      --windows 1000 --scheduler simulated_annealing
+
+  # §V-A pre-compiled replay:
+  ... --precompile /tmp/events.npz
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.config import SimConfig, REDUCED_SIM
+from repro.configs import get_sim_config
+from repro.core import precompile as precompile_mod
+from repro.core import tracegen
+from repro.core.pipeline import Simulation
+from repro.core.snapshot import save_snapshot
+from repro.core.state import validate_invariants
+from repro.parsers.gcd import GCDParser
+
+
+def build_cfg(args) -> SimConfig:
+    cfg = get_sim_config() if args.cell_a else REDUCED_SIM
+    over = {}
+    if args.nodes:
+        over["max_nodes"] = args.nodes
+    if args.tasks:
+        over["max_tasks"] = args.tasks
+    if args.scheduler:
+        over["scheduler"] = args.scheduler
+    if args.speed_factor:
+        over["speed_factor"] = args.speed_factor
+    if args.use_kernels:
+        over["use_kernels"] = True
+    if args.nodes and not args.tasks:
+        over["max_tasks"] = max(args.nodes * 16, 512)
+    if not args.cell_a:
+        over.setdefault("max_events_per_window", 4096)
+        over.setdefault("sched_batch", 256)
+    return dataclasses.replace(cfg, **over)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-dir", default=None)
+    ap.add_argument("--cell-a", action="store_true",
+                    help="the paper's 12.5K-node Google cell configuration")
+    ap.add_argument("--nodes", type=int, default=None)
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--jobs", type=int, default=400)
+    ap.add_argument("--windows", type=int, default=200)
+    ap.add_argument("--scheduler", default="greedy")
+    ap.add_argument("--speed-factor", type=float, default=0.0)
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="Pallas kernels (interpret mode on CPU)")
+    ap.add_argument("--precompile", default=None,
+                    help="path: pre-compile events to npz then replay (§V-A)")
+    ap.add_argument("--snapshot", default=None,
+                    help="write a pausable snapshot here at the end")
+    ap.add_argument("--batch-windows", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = build_cfg(args)
+    tmp = None
+    trace_dir = args.trace_dir
+    if trace_dir is None:
+        tmp = tempfile.TemporaryDirectory()
+        trace_dir = tmp.name
+        t0 = time.time()
+        summary = tracegen.generate_trace(
+            trace_dir, n_machines=cfg.max_nodes, n_jobs=args.jobs,
+            horizon_windows=args.windows, seed=args.seed,
+            usage_period_us=max(cfg.window_us * 4, 20_000_000))
+        print(f"generated GCD-schema trace: {summary} "
+              f"({time.time()-t0:.1f}s)")
+
+    start_us = tracegen.SHIFT_US - cfg.window_us
+    t0 = time.time()
+    if args.precompile:
+        n = precompile_mod.precompile_trace(cfg, trace_dir, args.precompile,
+                                            args.windows, start_us=start_us)
+        print(f"pre-compiled {n} windows -> {args.precompile} "
+              f"({time.time()-t0:.1f}s)")
+        source = precompile_mod.replay_single_windows(args.precompile)
+        parser = None
+    else:
+        parser = GCDParser(cfg, trace_dir)
+        source = parser.packed_windows(args.windows, start_us=start_us)
+
+    sim = Simulation(cfg, source, scheduler=args.scheduler,
+                     batch_windows=args.batch_windows, seed=args.seed)
+    t0 = time.time()
+    state = sim.run()
+    wall = time.time() - t0
+    sf = sim.stats_frame()
+    sim_seconds = sim.windows_done * cfg.window_us / 1e6
+    print(f"simulated {sim.windows_done} windows ({sim_seconds:.0f} sim-s) "
+          f"in {wall:.2f}s wall -> speed factor {sim_seconds / wall:.1f}x")
+    print(json.dumps({
+        "scheduler": args.scheduler,
+        "n_running_final": int(sf["n_running"][-1]),
+        "n_pending_final": int(sf["n_pending"][-1]),
+        "placements": int(sf["placements"][-1]),
+        "completions": int(sf["completions"][-1]),
+        "evictions": int(sf["evictions"][-1]),
+        "cpu_reserved_frac": float(sf["reserved_frac"][-1][0]),
+        "cpu_used_frac": float(sf["used_frac"][-1][0]),
+        "overestimate_frac": float(sf["overestimate_frac"][-1][0]),
+        "util_balance_var": float(sf["util_balance_var"][-1]),
+    }, indent=1))
+    problems = validate_invariants(state, cfg)
+    print("invariants:", problems or "OK")
+    if parser is not None:
+        print("parser:", parser.stats)
+    if args.snapshot:
+        save_snapshot(args.snapshot, state, cfg, sim.windows_done)
+        print(f"snapshot -> {args.snapshot}")
+    if tmp:
+        tmp.cleanup()
+    return sf
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Shared building blocks: param-definition table, RMSNorm, SwiGLU, RoPE.
+
+Every block module exposes ``param_defs(cfg) -> {name: ParamDef}`` and an
+``apply`` function. A single definition table drives both initialization and
+the logical-axis sharding tree, so the two can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones
+    scale: Optional[float] = None   # stddev; None -> 1/sqrt(fan_in) (first dim)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_from_defs(rng: jax.Array, defs: Dict[str, ParamDef],
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    out = {}
+    keys = jax.random.split(rng, max(len(defs), 1))
+    for key, (name, d) in zip(keys, sorted(defs.items())):
+        if d.init == "zeros":
+            out[name] = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            out[name] = jnp.ones(d.shape, dtype)
+        else:
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(d.shape[0], 1))
+            out[name] = (scale * jax.random.normal(key, d.shape)).astype(dtype)
+    return out
+
+
+def axes_from_defs(defs: Dict[str, ParamDef]) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {name: d.axes for name, d in defs.items()}
+
+
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array) -> jax.Array:
+    """Fused gate|up layout: last dim is 2*ff -> silu(gate) * up."""
+    gate, up = jnp.split(x, 2, axis=-1)
+    return jax.nn.silu(gate) * up
+
+
+# --- RoPE ------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- dense SwiGLU MLP ------------------------------------------------------
+
+
+def mlp_param_defs(cfg) -> Dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ParamDef((d, 2 * ff), ("embed", "ff")),
+        "wo": ParamDef((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp_apply(params, cfg, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    h = logical_constraint(h, "batch", "seq", "act_ff")
+    h = swiglu(h)
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))

@@ -1,0 +1,203 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060], chunked.
+
+The sequence is processed in chunks of Q tokens with a sequential
+``lax.scan`` over chunks carrying the (H, P, N) state — the same dataflow a
+Pallas SSD kernel would use on TPU (intra-chunk quadratic work on the MXU,
+inter-chunk recurrence carried in registers/VMEM). Per-chunk score matrices
+are (B, H, Q, Q), so peak memory is O(L·Q) not O(L²).
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim SSD heads,
+single B/C group of state size N, depthwise causal conv of width K over the
+concatenated [x, B, C] channels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.models.layers import ParamDef, rms_norm
+
+
+def param_defs(cfg) -> Dict[str, ParamDef]:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * din + 2 * n + h          # z, x, B, C, dt
+    conv_ch = din + 2 * n
+    return {
+        "in_proj": ParamDef((d, proj_out), ("embed", "ssm_proj")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), (None, "conv_ch"), scale=0.5),
+        "conv_b": ParamDef((conv_ch,), ("conv_ch",), init="zeros"),
+        "A_log": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "D": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamDef((din,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via K shifted adds. xBC: (B, L, CH); w: (K, CH)."""
+    K = w.shape[0]
+    out = xBC * w[-1].astype(xBC.dtype)
+    for i in range(K - 1):
+        shift = K - 1 - i
+        shifted = jnp.pad(xBC, ((0, 0), (shift, 0), (0, 0)))[:, :xBC.shape[1]]
+        out = out + shifted * w[i].astype(xBC.dtype)
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P); dt: (B, L, H) (already softplus'ed); A: (H,) negative;
+    Bm, Cm: (B, L, N). Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    Bb, L, H, Pp = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    # Keep the (B, L, ...) sequence tensors in their input dtype (bf16 on
+    # TPU); each chunk casts its own slice to f32 — full-sequence f32 copies
+    # of x/y cost ~4 GiB/device/layer at the 32K prefill (perf iteration 10).
+    xc = xh.reshape(Bb, nc, Q, H, Pp)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(jnp.float32)   # (already f32 math)
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+
+    dA = dtc * A.astype(jnp.float32)                 # (B, nc, Q, H), negative
+    cumA = jnp.cumsum(dA, axis=2)                    # inclusive within chunk
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bb, H, Pp, N), jnp.float32)
+
+    ltri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        xq, dtq, bq, cq, dAq, cumq = inp             # leading dim B
+        xq = xq.astype(jnp.float32)
+        bq = bq.astype(jnp.float32)
+        cq = cq.astype(jnp.float32)
+        # intra-chunk: scores[b,h,i,j] = (C_i . B_j) * exp(cumA_i - cumA_j), i>=j
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)      # (B, Q, Q)
+        decay = jnp.exp(cumq[:, :, None, :] - cumq[:, None, :, :])  # (B,Qi,Qj,H)
+        decay = jnp.where(ltri[None, :, :, None], decay, 0.0)
+        xdt = xq * dtq[..., None]                    # (B, Q, H, P)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, xdt)
+        # inter-chunk: state entering this chunk, decayed to each position
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", cq, state, jnp.exp(cumq))
+        # state update: decay old state across chunk + this chunk's contribution
+        decay_end = jnp.exp(cumq[:, -1, :][:, :, None] - cumq.transpose(0, 2, 1))  # (B,H,Q)
+        contrib = jnp.einsum("bjn,bhj,bjhp->bhpn", bq, decay_end * dtq.transpose(0, 2, 1), xq)
+        new_state = state * jnp.exp(cumq[:, -1, :])[:, :, None, None] + contrib
+        return new_state, (y_diag + y_off).astype(xh.dtype)
+
+    # scan over chunks (sequential — the Pallas-kernel dataflow)
+    from repro.models import runtime_flags
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3),
+          dA.transpose(1, 0, 2, 3), cumA.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(chunk_step, initial_state, xs,
+                                   unroll=runtime_flags.inner_unroll("ssd", nc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, L, H, Pp)
+    return y.astype(xh.dtype), final_state
+
+
+def apply(params, cfg, x: jax.Array, *, return_state: bool = False):
+    """Train/prefill forward. x: (B, L, d)."""
+    Bb, L, d = x.shape
+    din, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bm, Cm = xBC[..., :din], xBC[..., din:din + n], xBC[..., din + n:]
+    xs = logical_constraint(xs, "batch", "seq", "ssm_inner")
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(Bb, L, h, p)
+    y, state = ssd_chunked(xh, dt_f, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bb, L, din)
+
+    # gated RMSNorm then output projection
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bld,dk->blk", y, params["out_proj"].astype(x.dtype))
+    if return_state:
+        conv_tail = xBC_tail(cfg, x, zxbcdt)
+        return out, {"ssm": state, "conv": conv_tail}
+    return out
+
+
+def xBC_tail(cfg, x, zxbcdt):
+    """Last (conv_width - 1) pre-conv xBC rows — the decode conv window."""
+    _, xBC_raw, _ = _split_proj(cfg, zxbcdt)
+    k = cfg.ssm_conv
+    return xBC_raw[:, -(k - 1):, :].astype(jnp.float32)
+
+
+def init_state(cfg, batch: int) -> Dict[str, jax.Array]:
+    din, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * n), jnp.float32),
+    }
+
+
+def state_axes(cfg) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "ssm": ("batch", "act_ssm_heads", None, None),
+        "conv": ("batch", None, "conv_ch"),
+    }
+
+
+def decode(params, cfg, x: jax.Array, state: Dict[str, jax.Array]
+           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d)."""
+    Bb = x.shape[0]
+    din, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(x.dtype))
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)
+
+    # conv over ring buffer
+    window = jnp.concatenate([state["conv"].astype(x.dtype), xBC_new], axis=1)  # (B, K, ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(x.dtype))
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(x.dtype))[:, None, :]
+    new_conv = window[:, 1:, :].astype(jnp.float32)
+
+    xs, Bm, Cm = xBC[..., :din], xBC[..., din:din + n], xBC[..., din + n:]
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(Bb, h, p).astype(jnp.float32)
+    dt1 = dt_f[:, 0, :]                                # (B, H)
+    dA = jnp.exp(dt1 * A)                              # (B, H)
+    contrib = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0].astype(jnp.float32), dt1, xh)
+    new_ssm = state["ssm"] * dA[:, :, None, None] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), new_ssm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bb, 1, din).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bld,dk->blk", y, params["out_proj"].astype(x.dtype))
+    return out, {"ssm": new_ssm, "conv": new_conv}

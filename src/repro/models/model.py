@@ -1,0 +1,467 @@
+"""Layer-pattern compiler: builds any of the 10 assigned architectures from a
+repeating ``(mixer, mlp)`` pattern, scanned over repeats.
+
+Parameters are plain nested dicts (pytrees); a parallel tree of logical-axis
+tuples drives sharding (see distributed/sharding.py). Everything is
+``jax.eval_shape``-able so the multi-pod dry-run never materialises a 398B
+parameter set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention, mamba, moe
+from repro.models.layers import (ParamDef, axes_from_defs, init_from_defs,
+                                 mlp_apply, mlp_param_defs, rms_norm)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig, mixer: str, mlp: str) -> Dict[str, Dict[str, ParamDef]]:
+    d = cfg.d_model
+    out: Dict[str, Dict[str, ParamDef]] = {
+        "norm_mixer": {"w": ParamDef((d,), ("embed",), init="ones")},
+    }
+    out["mixer"] = attention.param_defs(cfg) if mixer == "attn" else mamba.param_defs(cfg)
+    if mlp != "none":
+        out["norm_mlp"] = {"w": ParamDef((d,), ("embed",), init="ones")}
+        out["mlp"] = mlp_param_defs(cfg) if mlp == "dense" else moe.param_defs(cfg)
+    return out
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    pattern = cfg.layer_pattern()
+    R = cfg.n_repeats
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+
+    params: Params = {}
+    vp = cfg.padded_vocab
+    params["embed"] = (0.02 * jax.random.normal(
+        k_embed, (cfg.n_codebooks, vp, cfg.d_model))).astype(dtype)
+
+    blocks = []
+    bkeys = jax.random.split(k_blocks, len(pattern))
+    for bkey, (mixer, mlp) in zip(bkeys, pattern):
+        groups = _block_defs(cfg, mixer, mlp)
+        gkeys = jax.random.split(bkey, len(groups))
+        pos_params = {}
+        for gkey, (gname, defs) in zip(gkeys, sorted(groups.items())):
+            stacked = jax.vmap(lambda k, d=defs: init_from_defs(k, d, dtype))(
+                jax.random.split(gkey, R))
+            pos_params[gname] = stacked
+        blocks.append(pos_params)
+    params["blocks"] = blocks
+
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (0.02 * jax.random.normal(
+            k_head, (cfg.d_model, cfg.n_codebooks * vp))).astype(dtype)
+    return params
+
+
+def param_logical_axes(cfg: ModelConfig) -> Params:
+    pattern = cfg.layer_pattern()
+    axes: Params = {"embed": ("codebook", "vocab", "embed"),
+                    "final_norm": ("embed",)}
+    blocks = []
+    for mixer, mlp in pattern:
+        groups = _block_defs(cfg, mixer, mlp)
+        blocks.append({g: {n: ("stack",) + d.axes for n, d in defs.items()}
+                       for g, defs in groups.items()})
+    axes["blocks"] = blocks
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) or (B, S, K) -> (B, S, d) summed over codebooks."""
+    if tokens.ndim == 2:
+        tokens = tokens[..., None]
+    emb = params["embed"].astype(jnp.dtype(cfg.dtype))      # (K, Vp, d)
+    # simple gather per codebook (K is 1 or 4 — unrolled)
+    parts = [emb[k][tokens[..., k]] for k in range(cfg.n_codebooks)]
+    x = sum(parts)
+    return logical_constraint(x, "batch", "seq", "act_embed")
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """(B, S, d) -> (B, S, K, Vp) in float32."""
+    vp = cfg.padded_vocab
+    B, S, _ = x.shape
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,kvd->bskv", x.astype(jnp.float32),
+                            params["embed"].astype(jnp.float32))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                            params["lm_head"].astype(jnp.float32))
+        logits = logits.reshape(B, S, cfg.n_codebooks, vp)
+    logits = logical_constraint(logits, "batch", "seq", None, "vocab")
+    # mask vocab padding
+    if vp != cfg.vocab_size:
+        pad = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad[None, None, None], -1e30, logits)
+    return logits
+
+
+def _apply_block(cfg, pos_params, mixer: str, mlp: str, x, positions, aux):
+    h = rms_norm(x, pos_params["norm_mixer"]["w"], cfg.norm_eps)
+    if mixer == "attn":
+        x = x + attention.apply(pos_params["mixer"], cfg, h, positions)
+    else:
+        x = x + mamba.apply(pos_params["mixer"], cfg, h)
+    if mlp != "none":
+        h = rms_norm(x, pos_params["norm_mlp"]["w"], cfg.norm_eps)
+        if mlp == "dense":
+            x = x + mlp_apply(pos_params["mlp"], cfg, h)
+        else:
+            out, a = moe.apply(pos_params["mlp"], cfg, h)
+            x = x + out
+            aux = aux + a
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)    # 'full': save nothing
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            vision_embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Causal forward over full sequences (train / prefill).
+
+    Returns (logits (B, S_total, K, Vp) float32, moe_aux_loss scalar).
+    """
+    x, aux = hidden_states(params, cfg, tokens, vision_embeds=vision_embeds)
+    return logits_from_hidden(params, cfg, x), aux
+
+
+def _stack_blocks(blocks):
+    """blocks is a list of per-position dicts whose leaves already carry the
+    leading repeat dim R; scan wants a single pytree — a tuple over positions."""
+    return tuple(blocks)
+
+
+# --- cost-probe entry points (dry-run): one pattern repeat, no layer scan ----
+
+def single_repeat(params_r, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Forward through ONE pattern repeat. params_r: per-position dicts with
+    the repeat dim already sliced away."""
+    aux = jnp.zeros((), jnp.float32)
+    for pos, (mixer, mlp) in enumerate(cfg.layer_pattern()):
+        x, aux = _apply_block(cfg, params_r[pos], mixer, mlp, x, positions, aux)
+    return x, aux
+
+
+def single_repeat_decode(params_r, cfg: ModelConfig, x: jax.Array,
+                         cache_r, cache_len: jax.Array):
+    """Decode through ONE pattern repeat."""
+    new_cache_r = []
+    for pos, (mixer, mlp) in enumerate(cfg.layer_pattern()):
+        p = params_r[pos]
+        h = rms_norm(x, p["norm_mixer"]["w"], cfg.norm_eps)
+        if mixer == "attn":
+            out, new_c = attention.decode(p["mixer"], cfg, h, cache_r[pos], cache_len)
+        else:
+            out, new_c = mamba.decode(p["mixer"], cfg, h, cache_r[pos])
+        x = x + out
+        new_cache_r.append(new_c)
+        if mlp != "none":
+            h = rms_norm(x, p["norm_mlp"]["w"], cfg.norm_eps)
+            if mlp == "dense":
+                x = x + mlp_apply(p["mlp"], cfg, h)
+            else:
+                out, _ = moe.apply(p["mlp"], cfg, h)
+                x = x + out
+    return x, tuple(new_cache_r)
+
+
+def head_and_embed_loss(params, cfg: ModelConfig, tokens: jax.Array,
+                        labels: jax.Array, hidden: jax.Array) -> jax.Array:
+    """Everything OUTSIDE the layer stack: embedding + final norm + logits +
+    CE. `hidden` stands in for the stack output (residual stream). Honors
+    cfg.chunked_ce so the dry-run head probe measures the configured path."""
+    x = embed_tokens(params, cfg, tokens)
+    x = x + hidden.astype(x.dtype)          # keep embed live in the grad graph
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.chunked_ce:
+        B, S, d = x.shape
+        lbl = labels if labels.ndim == 3 else labels[..., None]
+        ce = 0.0
+        for k in range(cfg.n_codebooks):
+            w = _head_weight(params, cfg, k).astype(x.dtype)
+            ce = ce + cross_entropy_chunked(
+                x.reshape(B * S, d), w, lbl[..., k].reshape(-1),
+                cfg.vocab_size, cfg.ce_chunks)
+        return ce / cfg.n_codebooks
+    logits = logits_from_hidden(params, cfg, x)
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits: (B, S, K, Vp) f32; labels: (B, S) or (B, S, K) int32.
+
+    Positions with label < 0 are ignored.
+    """
+    if labels.ndim == 2:
+        labels = labels[..., None]
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & mask[..., None].astype(bool)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - picked, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def cross_entropy_chunked(x: jax.Array, w_vd: jax.Array, labels: jax.Array,
+                          vocab_size: int, n_chunks: int) -> jax.Array:
+    """Fused projection+CE with streaming logsumexp over vocab chunks.
+
+    Never materialises the full (T, Vp) logits — at train_4k x 152K vocab the
+    full-logit path moves ~100x more HBM bytes than the whole layer stack
+    (perf log iteration 1). x: (T, d); w_vd: (Vp, d); labels: (T,) (<0 =
+    ignore). Backward recomputes each chunk's logits (jax.checkpoint).
+    """
+    T, d = x.shape
+    Vp = w_vd.shape[0]
+    assert Vp % n_chunks == 0
+    Vc = Vp // n_chunks
+    w_chunks = w_vd.reshape(n_chunks, Vc, d)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, s, picked = carry
+        c_idx, w_c = inp
+        logits = jnp.einsum("td,vd->tv", x, w_c).astype(jnp.float32)
+        col0 = c_idx * Vc
+        col = col0 + jnp.arange(Vc)
+        logits = jnp.where((col < vocab_size)[None, :], logits, -1e30)
+        logits = logical_constraint(logits, "tokens", None)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(logits - m_new[:, None]).sum(-1)
+        inchunk = (safe >= col0) & (safe < col0 + Vc)
+        local = jnp.take_along_axis(
+            logits, jnp.clip(safe - col0, 0, Vc - 1)[:, None], axis=-1)[:, 0]
+        picked = picked + jnp.where(inchunk, local, 0.0)
+        return (m_new, s, picked), None
+
+    init = (jnp.full((T,), -1e30, jnp.float32), jnp.zeros((T,), jnp.float32),
+            jnp.zeros((T,), jnp.float32))
+    (m, s, picked), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_chunks), w_chunks))
+    nll = jnp.where(valid, jnp.log(s) + m - picked, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def _head_weight(params: Params, cfg: ModelConfig, codebook: int) -> jax.Array:
+    """(Vp, d) projection for one codebook, tied or untied."""
+    if cfg.tie_embeddings:
+        return params["embed"][codebook]
+    vp = cfg.padded_vocab
+    return params["lm_head"][:, codebook * vp:(codebook + 1) * vp].T
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if cfg.chunked_ce:
+        x, aux = hidden_states(params, cfg, batch["tokens"],
+                               vision_embeds=batch.get("vision_embeds"))
+        if cfg.n_prefix:
+            x = x[:, cfg.n_prefix:]
+        B, S, d = x.shape
+        labels = batch["labels"]
+        if labels.ndim == 2:
+            labels = labels[..., None]
+        ce = 0.0
+        for k in range(cfg.n_codebooks):
+            w = _head_weight(params, cfg, k).astype(x.dtype)
+            ce = ce + cross_entropy_chunked(
+                x.reshape(B * S, d), w, labels[..., k].reshape(-1),
+                cfg.vocab_size, cfg.ce_chunks)
+        ce = ce / cfg.n_codebooks
+    else:
+        logits, aux = forward(params, cfg, batch["tokens"],
+                              vision_embeds=batch.get("vision_embeds"))
+        if cfg.n_prefix:
+            logits = logits[:, cfg.n_prefix:]
+        ce = cross_entropy(logits, batch["labels"])
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "moe_aux": aux}
+
+
+def hidden_states(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  vision_embeds: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """forward() up to (but not including) the logit projection."""
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.n_prefix and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pattern = cfg.layer_pattern()
+
+    def body(carry, block_r):
+        xx, aux = carry
+        for pos, (mixer, mlp) in enumerate(pattern):
+            xx, aux = _apply_block(cfg, block_r[pos], mixer, mlp, xx, positions, aux)
+        return (xx, aux), None
+
+    body = _remat(body, cfg.remat_policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               _stack_blocks(params["blocks"]))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Tuple[Any, ...]:
+    pattern = cfg.layer_pattern()
+    R = cfg.n_repeats
+
+    def rep(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), tree)
+
+    cache = []
+    for mixer, _ in pattern:
+        if mixer == "attn":
+            c = attention.init_cache(cfg, batch, max_seq, dtype)
+        else:
+            c = mamba.init_state(cfg, batch)
+        cache.append(rep(c))
+    return tuple(cache)
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Tuple[Any, ...]:
+    pattern = cfg.layer_pattern()
+    axes = []
+    for mixer, _ in pattern:
+        ax = attention.cache_axes(cfg) if mixer == "attn" else mamba.state_axes(cfg)
+        axes.append({k: ("stack",) + v for k, v in ax.items()})
+    return tuple(axes)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Tuple[Any, ...], cache_len: jax.Array
+                ) -> Tuple[jax.Array, Tuple[Any, ...]]:
+    """One new token per sequence against a filled cache.
+
+    tokens: (B, 1) or (B, 1, K); cache_len: scalar int32.
+    Returns (logits (B, 1, K, Vp), updated cache).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    pattern = cfg.layer_pattern()
+
+    def body(carry, scanned):
+        xx = carry
+        block_r, cache_r = scanned
+        new_cache_r = []
+        for pos, (mixer, mlp) in enumerate(pattern):
+            p = block_r[pos]
+            h = rms_norm(xx, p["norm_mixer"]["w"], cfg.norm_eps)
+            if mixer == "attn":
+                out, new_c = attention.decode(p["mixer"], cfg, h, cache_r[pos], cache_len)
+            else:
+                out, new_c = mamba.decode(p["mixer"], cfg, h, cache_r[pos])
+            xx = xx + out
+            new_cache_r.append(new_c)
+            if mlp != "none":
+                h = rms_norm(xx, p["norm_mlp"]["w"], cfg.norm_eps)
+                if mlp == "dense":
+                    xx = xx + mlp_apply(p["mlp"], cfg, h)
+                else:
+                    out, _ = moe.apply(p["mlp"], cfg, h)
+                    xx = xx + out
+        return xx, tuple(new_cache_r)
+
+    x, new_cache = jax.lax.scan(body, x, (_stack_blocks(params["blocks"]), cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            max_seq: int, vision_embeds: Optional[jax.Array] = None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, Tuple[Any, ...]]:
+    """Run the prompt through the model, returning last-position logits and a
+    cache sized ``max_seq`` ready for decode_step."""
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.n_prefix and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pattern = cfg.layer_pattern()
+
+    def body(xx, block_r):
+        new_cache_r = []
+        for pos, (mixer, mlp) in enumerate(pattern):
+            p = block_r[pos]
+            h = rms_norm(xx, p["norm_mixer"]["w"], cfg.norm_eps)
+            if mixer == "attn":
+                q_out, kv = _attn_prefill(p["mixer"], cfg, h, positions, max_seq, cache_dtype)
+                xx = xx + q_out
+                new_cache_r.append(kv)
+            else:
+                out, st = mamba.apply(p["mixer"], cfg, h, return_state=True)
+                xx = xx + out
+                new_cache_r.append(st)
+            if mlp != "none":
+                h = rms_norm(xx, p["norm_mlp"]["w"], cfg.norm_eps)
+                if mlp == "dense":
+                    xx = xx + mlp_apply(p["mlp"], cfg, h)
+                else:
+                    out, _ = moe.apply(p["mlp"], cfg, h)
+                    xx = xx + out
+        return xx, tuple(new_cache_r)
+
+    x, cache = jax.lax.scan(body, x, _stack_blocks(params["blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits, cache
+
+
+def _attn_prefill(p, cfg, h, positions, max_seq, cache_dtype):
+    B, S, _ = h.shape
+    out = attention.apply(p, cfg, h, positions)
+    # recompute k/v for the cache (cheap relative to attention itself; XLA CSEs)
+    q, k, v = attention._project_qkv(p, cfg, h, positions)
+    del q
+    hd = cfg.resolved_head_dim
+    kc = jnp.zeros((B, max_seq, cfg.n_kv_heads, hd), cache_dtype)
+    vc = jnp.zeros((B, max_seq, cfg.n_kv_heads, hd), cache_dtype)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(cache_dtype), (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(cache_dtype), (0, 0, 0, 0))
+    kc = logical_constraint(kc, "batch", "seq_kv", "act_kv", "head_dim")
+    vc = logical_constraint(vc, "batch", "seq_kv", "act_kv", "head_dim")
+    return out, {"k": kc, "v": vc}

@@ -1,0 +1,35 @@
+"""Process-wide model-execution flags.
+
+UNROLL: per-scan-kind unroll factors for *inner* scans (SSD chunk scan,
+query-chunked attention). The dry-run's cost probes use these for the
+**unroll-differencing** method: XLA's cost analysis counts a while-loop body
+exactly once, so a probe compiled at unroll=1 counts (outer + 1 body) and at
+unroll=u counts (outer + u bodies); the difference isolates the per-chunk body
+cost, which is then scaled by the true trip count. This keeps probe HLO tiny
+(u<=4) while recovering exact totals (EXPERIMENTS.md §Dry-run methodology).
+
+Production programs keep unroll=1 (small HLO, honest memory analysis).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict
+
+UNROLL: Dict[str, int] = {}
+
+
+@contextlib.contextmanager
+def scan_unroll(**kinds: int):
+    """e.g. ``with scan_unroll(ssd=4):`` — unroll SSD chunk scans 4x."""
+    global UNROLL
+    old = dict(UNROLL)
+    UNROLL.update(kinds)
+    try:
+        yield
+    finally:
+        UNROLL = old
+
+
+def inner_unroll(kind: str, length: int) -> int:
+    """Unroll factor for an inner scan of `length` iterations."""
+    return max(1, min(UNROLL.get(kind, 1), length))

@@ -1,0 +1,80 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping — dependency-free.
+
+Optimizer state is a pytree mirroring params, so the sharding tree for params
+applies leaf-for-leaf to both moments (FSDP shards optimizer state the same
+way it shards parameters — ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array       # scalar int32
+    mu: Any               # first moment, like params
+    nu: Any               # second moment, like params
+    ef: Any = None        # error-feedback buffers (grad compression), optional
+
+
+def init_opt_state(params, with_ef: bool = False) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    ef = jax.tree.map(jnp.copy, zeros) if with_ef else None
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros), ef=ef)
+
+
+def lr_schedule(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps) /
+                    jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(params, grads, state: OptState, tc: TrainConfig
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, tc)
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a); new_m.append(b); new_v.append(c)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (jax.tree.unflatten(treedef, new_p),
+            OptState(step, jax.tree.unflatten(treedef, new_m),
+                     jax.tree.unflatten(treedef, new_v)),
+            metrics)

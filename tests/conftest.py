@@ -1,0 +1,13 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run alone forces 512 — and it
+# runs in its own subprocess). Keep XLA single-threaded-ish and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

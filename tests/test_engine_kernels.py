@@ -1,0 +1,85 @@
+"""The engine's Pallas-kernel path (cfg.use_kernels=True, interpret mode on
+CPU) must produce bit-identical simulations to the jnp oracle path — the
+end-to-end link between kernels/ and core/engine.py. Plus: engine determinism
+and per-priority accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core import engine as eng
+from repro.core.events import EventKind, HostEvent, pack_window, stack_windows
+from repro.core.schedulers import get_scheduler
+from repro.core.state import SimState, init_state, validate_invariants
+
+
+def _windows(cfg, seed=0, n_nodes=16, n_tasks=48):
+    r = np.random.default_rng(seed)
+    evs0 = [HostEvent(0, EventKind.ADD_NODE, i,
+                      a=(float(r.uniform(.4, 1)), float(r.uniform(.4, 1)), 1.0))
+            for i in range(n_nodes)]
+    evs0 += [HostEvent(0, EventKind.ADD_NODE_ATTR, i, attr_idx=0,
+                       attr_val=int(r.integers(0, 3))) for i in range(n_nodes)]
+    evs1 = []
+    for t in range(n_tasks):
+        cons = [(0, 1, int(r.integers(0, 3)))] if r.random() < .4 else None
+        evs1.append(HostEvent(1, EventKind.ADD_TASK, t,
+                              a=(float(r.uniform(.02, .2)),
+                                 float(r.uniform(.02, .2)), 0.0),
+                              prio=int(r.integers(0, 12)), constraints=cons))
+    evs2 = [HostEvent(2, EventKind.UPDATE_TASK_USED, t,
+                      u=tuple(r.uniform(0, .1, 8))) for t in range(0, n_tasks, 3)]
+    ws = [pack_window(cfg, evs0, 0), pack_window(cfg, evs1, 1),
+          pack_window(cfg, evs2, 2)]
+    return jax.tree.map(jnp.asarray, stack_windows(ws))
+
+
+def test_kernel_path_bit_identical_to_oracle_path():
+    cfg_ref = REDUCED_SIM
+    cfg_ker = dataclasses.replace(REDUCED_SIM, use_kernels=True)
+    windows = _windows(cfg_ref)
+    s_ref, st_ref = eng.run_windows(init_state(cfg_ref), windows, cfg_ref,
+                                    get_scheduler("greedy"))
+    s_ker, st_ker = eng.run_windows(init_state(cfg_ker), windows, cfg_ker,
+                                    get_scheduler("greedy"))
+    for f in SimState._fields:
+        a, b = np.asarray(getattr(s_ref, f)), np.asarray(getattr(s_ker, f))
+        if a.dtype.kind == "f":
+            assert np.allclose(a, b, atol=1e-5), f
+        else:
+            assert np.array_equal(a, b), f
+    assert validate_invariants(s_ker, cfg_ker) == {}
+    assert np.array_equal(np.asarray(st_ref["placements"]),
+                          np.asarray(st_ker["placements"]))
+
+
+def test_engine_fully_deterministic():
+    """Same windows + same seed => bit-identical state (the paper §VII notes
+    replay determinism as both a risk and a feature — we pin the feature)."""
+    cfg = REDUCED_SIM
+    windows = _windows(cfg, seed=5)
+    outs = []
+    for _ in range(2):
+        s, _ = eng.run_windows(init_state(cfg), windows, cfg,
+                               get_scheduler("simulated_annealing"), seed=3)
+        outs.append(s)
+    for f in SimState._fields:
+        assert np.array_equal(np.asarray(getattr(outs[0], f)),
+                              np.asarray(getattr(outs[1], f))), f
+
+
+def test_per_priority_stats():
+    cfg = REDUCED_SIM
+    evs0 = [HostEvent(0, EventKind.ADD_NODE, 0, a=(2.0, 2.0, 1.0))]
+    evs1 = [HostEvent(1, EventKind.ADD_TASK, t, a=(0.1, 0.1, 0.0), prio=p)
+            for t, p in enumerate([0, 0, 9, 11])]
+    ws = jax.tree.map(jnp.asarray, stack_windows(
+        [pack_window(cfg, evs0, 0), pack_window(cfg, evs1, 1)]))
+    _, stats = eng.run_windows(init_state(cfg), ws, cfg,
+                               get_scheduler("greedy"))
+    by_prio = np.asarray(stats["running_by_priority"][-1])
+    assert by_prio[0] == 2 and by_prio[9] == 1 and by_prio[11] == 1
+    assert by_prio.sum() == int(stats["n_running"][-1])

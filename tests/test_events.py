@@ -1,0 +1,86 @@
+"""Event vocabulary, Table I mapping, window packing and dedup linearisation."""
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core.events import (EventKind, GCD_TASK_ACTION, HostEvent,
+                               dedup_events, empty_window, pack_window,
+                               stack_windows)
+
+
+def test_table1_mapping():
+    # paper Table I: SUBMIT->Add, SCHEDULE->none, EVICT/FAIL/FINISH/KILL/LOST
+    # ->Remove, UPDATE_*->UpdateRequired
+    assert GCD_TASK_ACTION[0] == EventKind.ADD_TASK
+    assert GCD_TASK_ACTION[1] is None
+    for a in (2, 3, 4, 5, 6):
+        assert GCD_TASK_ACTION[a] == EventKind.REMOVE_TASK
+    for a in (7, 8):
+        assert GCD_TASK_ACTION[a] == EventKind.UPDATE_TASK_REQUIRED
+
+
+def test_pack_window_basic():
+    cfg = REDUCED_SIM
+    evs = [HostEvent(12_000_000, EventKind.ADD_TASK, 3, a=(0.1, 0.2, 0.0),
+                     prio=5, job=7, constraints=[(1, 1, 2)]),
+           HostEvent(11_000_000, EventKind.ADD_NODE, 0, a=(1.0, 1.0, 1.0))]
+    w = pack_window(cfg, evs, window_idx=2)
+    assert int(w.n_valid) == 2
+    # sorted by time: node add first
+    assert w.kind[0] == EventKind.ADD_NODE
+    assert w.kind[1] == EventKind.ADD_TASK
+    assert w.t_off[0] == 11_000_000 - 2 * cfg.window_us
+    assert w.prio[1] == 5
+    assert tuple(w.constraints[1, 0]) == (1, 1, 2)
+
+
+def test_pack_window_overflow_raises():
+    cfg = REDUCED_SIM
+    evs = [HostEvent(i, EventKind.UPDATE_TASK_USED, i, u=(0.1,) * 8)
+           for i in range(cfg.max_events_per_window * 2)]
+    with pytest.raises(ValueError):
+        pack_window(cfg, evs, 0)
+
+
+def test_dedup_last_wins():
+    evs = [HostEvent(1, EventKind.UPDATE_TASK_USED, 5, u=(0.1,) * 8),
+           HostEvent(2, EventKind.UPDATE_TASK_USED, 5, u=(0.9,) * 8)]
+    out = dedup_events(evs)
+    assert len(out) == 1 and out[0].u[0] == 0.9
+
+
+def test_dedup_add_then_update_merges_req():
+    evs = [HostEvent(1, EventKind.ADD_TASK, 5, a=(0.1, 0.1, 0.1), prio=1, job=3),
+           HostEvent(2, EventKind.UPDATE_TASK_REQUIRED, 5, a=(0.5, 0.1, 0.1),
+                     prio=2)]
+    out = dedup_events(evs)
+    assert len(out) == 1
+    assert out[0].kind == EventKind.ADD_TASK      # identity kept
+    assert out[0].a[0] == 0.5 and out[0].prio == 2  # newest requirements
+    assert out[0].job == 3
+
+
+def test_dedup_add_remove_cancels():
+    evs = [HostEvent(1, EventKind.ADD_TASK, 5, a=(0.1, 0.1, 0.1)),
+           HostEvent(2, EventKind.UPDATE_TASK_USED, 5, u=(0.2,) * 8),
+           HostEvent(3, EventKind.REMOVE_TASK, 5, a=(0.0, 0, 0))]
+    assert dedup_events(evs) == []
+
+
+def test_dedup_attr_slots_independent():
+    evs = [HostEvent(1, EventKind.ADD_NODE_ATTR, 2, attr_idx=0, attr_val=1),
+           HostEvent(2, EventKind.ADD_NODE_ATTR, 2, attr_idx=1, attr_val=7),
+           HostEvent(3, EventKind.REMOVE_NODE_ATTR, 2, attr_idx=0)]
+    out = dedup_events(evs)
+    assert len(out) == 2
+    kinds = {(e.kind, e.attr_idx) for e in out}
+    assert (EventKind.REMOVE_NODE_ATTR, 0) in kinds
+    assert (EventKind.ADD_NODE_ATTR, 1) in kinds
+
+
+def test_stack_windows_shapes():
+    cfg = REDUCED_SIM
+    ws = [pack_window(cfg, [], i) for i in range(4)]
+    s = stack_windows(ws)
+    assert s.kind.shape == (4, cfg.max_events_per_window)
+    assert s.n_valid.shape == (4,)

@@ -1,0 +1,89 @@
+"""Scheduler fleets (distributed simulation) + the detachable monitor."""
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core import fleet, monitor
+from repro.core.events import EventKind, HostEvent, pack_window, stack_windows
+from repro.core.snapshot import save_snapshot
+from repro.core.state import init_state, validate_invariants
+
+CFG = REDUCED_SIM
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _windows(n_nodes=8, n_tasks=24, seed=0):
+    r = np.random.default_rng(seed)
+    evs0 = [HostEvent(0, EventKind.ADD_NODE, i, a=(1.0, 1.0, 1.0))
+            for i in range(n_nodes)]
+    evs1 = [HostEvent(1, EventKind.ADD_TASK, t,
+                      a=(float(r.uniform(.05, .3)),
+                         float(r.uniform(.05, .3)), 0.0),
+                      prio=int(r.integers(0, 12))) for t in range(n_tasks)]
+    return jax.tree.map(jnp.asarray, stack_windows(
+        [pack_window(CFG, evs0, 0), pack_window(CFG, evs1, 1)]))
+
+
+def test_fleet_replicas_differ_but_hold_invariants():
+    windows = _windows()
+    states, stats = fleet.run_fleet(windows, CFG, "random", n_replicas=4)
+    assert stats["placements"].shape == (4, 2)
+    assert (np.asarray(stats["placements"][:, -1]) > 0).all()
+    # different seeds -> at least two distinct placements
+    nodes = np.asarray(states.task_node)
+    assert not (nodes[0] == nodes[1]).all()
+    for i in range(4):
+        st = jax.tree.map(lambda a, i=i: a[i], states)
+        assert validate_invariants(st, CFG) == {}
+
+
+def test_fleet_deterministic():
+    windows = _windows()
+    a = fleet.run_fleet(windows, CFG, "random", n_replicas=2, seed=7)
+    b = fleet.run_fleet(windows, CFG, "random", n_replicas=2, seed=7)
+    assert np.array_equal(np.asarray(a[0].task_node),
+                          np.asarray(b[0].task_node))
+
+
+@pytest.mark.slow
+def test_fleet_lowers_on_production_style_mesh():
+    """The simulator's own multi-pod dry-run (2x2x2 host devices)."""
+    script = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import jax\n"
+        "from repro.config import REDUCED_SIM\n"
+        "from repro.core import fleet\n"
+        "mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))\n"
+        "compiled = fleet.lower_fleet(REDUCED_SIM, mesh, 'greedy',\n"
+        "                             n_windows=2)\n"
+        "assert compiled.cost_analysis() is not None\n"
+        "print('FLEET_LOWER_OK')\n")
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "FLEET_LOWER_OK" in r.stdout
+
+
+def test_monitor_render_and_snapshot_watch():
+    windows = _windows()
+    from repro.core import engine as eng
+    from repro.core.schedulers import get_scheduler
+    state, _ = eng.run_windows(init_state(CFG), windows, CFG,
+                               get_scheduler("greedy"))
+    text = monitor.render(state, CFG, windows_done=2)
+    assert "tasks running" in text and "cpu  reserved" in text
+    assert "busiest nodes" in text
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "snap.npz")
+        save_snapshot(p, state, CFG, 2)
+        # one poll iteration of the detachable monitor
+        monitor.watch_snapshot(p, interval=0.01, iterations=1)

@@ -1,0 +1,106 @@
+"""Parser round-trip: generator-written GCD-schema CSVs -> events -> engine,
+with anomaly injection (paper §VIII: cope with data corruption)."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core.events import EventKind
+from repro.core.pipeline import Simulation
+from repro.core.state import validate_invariants
+from repro.core.tracegen import SHIFT_US, generate_trace
+from repro.parsers.gcd import GCDParser
+
+CFG = REDUCED_SIM
+START = SHIFT_US - CFG.window_us
+
+
+@pytest.fixture(scope="module")
+def trace_dir():
+    d = tempfile.mkdtemp()
+    generate_trace(d, n_machines=24, n_jobs=30, horizon_windows=50, seed=3,
+                   usage_period_us=10_000_000)
+    return d
+
+
+def test_counts_match_ground_truth(trace_dir):
+    parser = GCDParser(CFG, trace_dir)
+    kinds = {}
+    for w in parser.packed_windows(70, start_us=START):
+        k = np.asarray(w.kind)
+        for kk in k[k != 0]:
+            kinds[EventKind(int(kk))] = kinds.get(EventKind(int(kk)), 0) + 1
+    assert kinds[EventKind.ADD_NODE] == 24 or kinds[EventKind.ADD_NODE] >= 24
+    assert kinds.get(EventKind.ADD_TASK, 0) > 0
+    assert kinds.get(EventKind.UPDATE_TASK_USED, 0) > 0
+    assert parser.stats.usage_unknown_task == 0
+    assert parser.stats.slot_overflow == 0
+
+
+def test_engine_runs_parsed_trace(trace_dir):
+    parser = GCDParser(CFG, trace_dir)
+    sim = Simulation(CFG, parser.packed_windows(70, start_us=START),
+                     scheduler="greedy", batch_windows=16)
+    state = sim.run()
+    sf = sim.stats_frame()
+    assert int(sf["placements"][-1]) > 0
+    assert int(sf["n_nodes"][-1]) > 0
+    assert float(sf["used_frac"][-1][0]) > 0        # usage reached nodes
+    assert validate_invariants(state, CFG) == {}
+
+
+def test_anomalies_are_tolerated(trace_dir):
+    """Corrupt rows, usage for unknown tasks, duplicate terminals."""
+    bad_dir = tempfile.mkdtemp()
+    for name in os.listdir(trace_dir):
+        with open(os.path.join(trace_dir, name)) as f:
+            content = f.read()
+        with open(os.path.join(bad_dir, name), "w") as f:
+            f.write(content)
+    # corrupted rows + usage for a task that never existed + dup terminal
+    with open(os.path.join(bad_dir, "task_usage-00000-of-00001.csv"), "a") as f:
+        f.write("not,a,number,row,,x,y\n")
+        f.write(f"{SHIFT_US},{SHIFT_US+1},999999,0,,0.1,0.1,0.1,0,0.1,0.1,"
+                f"0.01,0.01,0.2,0.01,1.5,0.03,1.0,1,0.1\n")
+    with open(os.path.join(bad_dir, "task_events-00000-of-00001.csv"), "a") as f:
+        f.write(f"{SHIFT_US+10_000_000},,6000000000,0,,4,u,0,1,0.1,0.1,0.1,0\n")
+        f.write(f"{SHIFT_US+10_000_001},,6000000000,0,,4,u,0,1,0.1,0.1,0.1,0\n")
+    parser = GCDParser(CFG, bad_dir)
+    sim = Simulation(CFG, parser.packed_windows(70, start_us=START),
+                     scheduler="greedy", batch_windows=16)
+    state = sim.run()
+    assert validate_invariants(state, CFG) == {}
+    assert parser.stats.usage_unknown_task >= 1
+
+
+def test_slot_overflow_counted():
+    cfg = REDUCED_SIM._replace if hasattr(REDUCED_SIM, "_replace") else None
+    import dataclasses
+    tiny = dataclasses.replace(REDUCED_SIM, max_tasks=8)
+    d = tempfile.mkdtemp()
+    generate_trace(d, n_machines=8, n_jobs=40, horizon_windows=40, seed=5)
+    parser = GCDParser(tiny, d)
+    list(parser.packed_windows(60, start_us=START))
+    assert parser.stats.slot_overflow > 0
+
+
+def test_precompile_replay_equivalence(trace_dir):
+    """§V-A: pre-compiled replay produces the same final state as live parse."""
+    from repro.core.precompile import precompile_trace, replay_single_windows
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "events.npz")
+        n = precompile_trace(CFG, trace_dir, path, 70, start_us=START)
+        assert n == 70
+        sim_live = Simulation(CFG, GCDParser(CFG, trace_dir).packed_windows(
+            70, start_us=START), scheduler="greedy", batch_windows=16)
+        s_live = sim_live.run()
+        sim_replay = Simulation(CFG, replay_single_windows(path),
+                                scheduler="greedy", batch_windows=16)
+        s_replay = sim_replay.run()
+        for f in ("task_state", "task_node", "node_reserved", "placements",
+                  "evictions", "completions"):
+            a, b = np.asarray(getattr(s_live, f)), np.asarray(
+                getattr(s_replay, f))
+            assert np.array_equal(a, b), f
