@@ -9,11 +9,13 @@ import time
 
 def main() -> None:
     from benchmarks import (fig7_scaling, kernels_bench, roofline_bench,
-                            schedulers_bench, table2_features, throughput)
+                            scenarios_bench, schedulers_bench,
+                            table2_features, throughput)
     suites = [
         ("table2_features", table2_features),   # paper Table II
         ("kernels", kernels_bench),
         ("schedulers", schedulers_bench),       # paper §IV use case
+        ("scenarios", scenarios_bench),         # batched what-if fleet
         ("fig7_scaling", fig7_scaling),         # paper Fig. 7
         ("throughput", throughput),             # paper §IV/§VI claims
         ("roofline", roofline_bench),           # framework §Roofline

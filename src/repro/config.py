@@ -282,6 +282,10 @@ class SimConfig:
     seed: int = 0
     use_kernels: bool = False         # Pallas interpret kernels (CPU) vs jnp ref
     trace_time_shift_us: int = 600_000_000  # GCD's 10-minute shift
+    scenario_salt: int = 0x5DEECE66   # seeds the deterministic perturbation
+                                      # hashes of the what-if scenario fleet
+                                      # (repro/scenarios) — change to resample
+                                      # outage/thinning victim sets
 
     def scaled(self, nodes: int, tasks: int) -> "SimConfig":
         return replace(self, max_nodes=nodes, max_tasks=tasks)

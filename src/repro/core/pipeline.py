@@ -61,26 +61,31 @@ class WindowPrefetcher:
             yield item
 
 
-class Simulation:
-    """End-to-end driver: trace source -> prefetcher -> scanned engine.
+class WindowedDriver:
+    """Shared drive loop: prefetcher -> jitted advance -> stats/pacing.
 
-    Supports pause/snapshot/resume (paper §IV — restore is 'not implemented
-    yet' there; it is here, via core/snapshot.py) and an optional real-time
-    speed factor (sleeps so that sim-time advances at `speed_factor` x
-    wall-clock, matching the paper's 75x experiments).
+    Subclasses own ``self.state`` and implement ``_advance(batch, seed)``
+    (consume one stacked window batch, update ``self.state``, return the
+    stats pytree). Everything else — pause/resume, the per-batch seed
+    derivation, real-time pacing, stats accumulation — lives here once, so
+    the single-trajectory Simulation and the batched ScenarioFleet
+    (repro/scenarios/runner.py) cannot drift apart (the scenario fleet's
+    lane-0 bit-identity guarantee depends on sharing this exact loop).
     """
 
+    state: SimState
+
     def __init__(self, cfg: SimConfig, window_source: Iterator[EventWindow],
-                 scheduler: Optional[str] = None, batch_windows: int = 32,
-                 seed: Optional[int] = None):
+                 batch_windows: int = 32, seed: Optional[int] = None):
         self.cfg = cfg
-        self.scheduler = scheduler or cfg.scheduler
-        self.state = init_state(cfg)
         self.prefetcher = WindowPrefetcher(cfg, window_source, batch_windows)
         self.seed = cfg.seed if seed is None else seed
         self.stats_rows: List[Dict[str, np.ndarray]] = []
         self.windows_done = 0
         self._paused = threading.Event()
+
+    def _advance(self, batch: EventWindow, seed: int):
+        raise NotImplementedError
 
     def pause(self):
         self._paused.set()
@@ -95,9 +100,8 @@ class Simulation:
             while self._paused.is_set():
                 time.sleep(0.01)
             W = batch.kind.shape[0]
-            self.state, stats = engine_mod.run_windows_jit(
-                self.state, jax.tree.map(np.asarray, batch), self.cfg,
-                self.scheduler, self.seed + self.windows_done)
+            stats = self._advance(jax.tree.map(np.asarray, batch),
+                                  self.seed + self.windows_done)
             self.windows_done += W
             self.stats_rows.append(jax.tree.map(np.asarray, stats))
             if on_batch is not None:
@@ -121,3 +125,25 @@ class Simulation:
         return {k: np.concatenate([r[k] if np.ndim(r[k]) else r[k][None]
                                    for r in self.stats_rows])
                 for k in keys}
+
+
+class Simulation(WindowedDriver):
+    """End-to-end driver: trace source -> prefetcher -> scanned engine.
+
+    Supports pause/snapshot/resume (paper §IV — restore is 'not implemented
+    yet' there; it is here, via core/snapshot.py) and an optional real-time
+    speed factor (sleeps so that sim-time advances at `speed_factor` x
+    wall-clock, matching the paper's 75x experiments).
+    """
+
+    def __init__(self, cfg: SimConfig, window_source: Iterator[EventWindow],
+                 scheduler: Optional[str] = None, batch_windows: int = 32,
+                 seed: Optional[int] = None):
+        super().__init__(cfg, window_source, batch_windows, seed)
+        self.scheduler = scheduler or cfg.scheduler
+        self.state = init_state(cfg)
+
+    def _advance(self, batch: EventWindow, seed: int):
+        self.state, stats = engine_mod.run_windows_jit(
+            self.state, batch, self.cfg, self.scheduler, seed)
+        return stats

@@ -49,25 +49,32 @@ def _base(state: SimState, cfg: SimConfig):
 
 
 def _finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
-              dynamic_bestfit: bool = False) -> SimState:
+              dynamic_bestfit=False) -> SimState:
     """Sequential capacity-checked assignment in priority order.
 
     pref: (P, N) preference scores (higher better; NEG = never).
     dynamic_bestfit: recompute best-fit scores against the *running*
     reservation tally (true best-fit-decreasing) instead of static pref.
+    May be a traced bool scalar (the scenario fleet dispatches schedulers
+    per-lane at runtime); the static True/False fast paths stay unchanged.
     """
     N = cfg.max_nodes
     total = jnp.where(state.node_active[:, None], state.node_total, -1.0)
     denom = jnp.maximum(state.node_total, 1e-6)
     req = state.task_req[idx]                                   # (P, R)
+    is_traced = isinstance(dynamic_bestfit, jax.Array)
 
     def body(i, carry):
         reserved, node_of = carry
         free = total - reserved                                 # (N, R)
         fit = (req[i][None, :] <= free + 1e-9).all(-1) & base_ok[i]
-        if dynamic_bestfit:
-            sc = -((free - req[i][None, :]) / denom).sum(-1)
+        if is_traced or dynamic_bestfit:
+            sc_dyn = -((free - req[i][None, :]) / denom).sum(-1)
+        if is_traced:
+            sc = jnp.where(dynamic_bestfit, sc_dyn, pref[i])
             sc = jnp.where(fit, sc, NEG)
+        elif dynamic_bestfit:
+            sc = jnp.where(fit, sc_dyn, NEG)
         else:
             sc = jnp.where(fit, pref[i], NEG)
         n = jnp.argmax(sc).astype(jnp.int32)
@@ -92,6 +99,36 @@ def _finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
 
 
 # --- concrete schedulers -----------------------------------------------------
+#
+# Every scheduler is a *proposal* function with the uniform signature
+#   propose(state, cfg, rng, idx, valid, base_ok, scores) -> pref (P, N)
+# plus a shared `_finalize` pass. The public `(state, cfg, rng) -> state`
+# entry points below just glue `_base` + propose + `_finalize` together; the
+# scenario fleet (repro/scenarios/batch.py) instead computes `_base` once and
+# lax.switches over the proposal functions only, so per-lane scheduler
+# dispatch does not duplicate the expensive shared passes.
+
+def _propose_greedy(state, cfg, rng, idx, valid, base_ok, scores):
+    """Best-fit decreasing: pref is unused (dynamic re-scoring in _finalize),
+    returned scores only pin the shape/dtype."""
+    return scores
+
+
+def _propose_first_fit(state, cfg, rng, idx, valid, base_ok, scores):
+    return -jnp.broadcast_to(
+        jnp.arange(cfg.max_nodes, dtype=jnp.float32)[None, :], base_ok.shape)
+
+
+def _propose_round_robin(state, cfg, rng, idx, valid, base_ok, scores):
+    start = (state.window * 131) % cfg.max_nodes
+    order = (jnp.arange(cfg.max_nodes) - start) % cfg.max_nodes
+    return -jnp.broadcast_to(order.astype(jnp.float32)[None, :],
+                             base_ok.shape)
+
+
+def _propose_random(state, cfg, rng, idx, valid, base_ok, scores):
+    return jax.random.uniform(rng, base_ok.shape)
+
 
 def greedy(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
     """Best-fit decreasing: tightest feasible node, re-scored dynamically."""
@@ -101,24 +138,20 @@ def greedy(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
 
 
 def first_fit(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, _ = _base(state, cfg)
-    pref = -jnp.broadcast_to(
-        jnp.arange(cfg.max_nodes, dtype=jnp.float32)[None, :],
-        base_ok.shape)
+    idx, valid, base_ok, scores = _base(state, cfg)
+    pref = _propose_first_fit(state, cfg, rng, idx, valid, base_ok, scores)
     return _finalize(state, cfg, idx, valid, base_ok, pref)
 
 
 def round_robin(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, _ = _base(state, cfg)
-    start = (state.window * 131) % cfg.max_nodes
-    order = (jnp.arange(cfg.max_nodes) - start) % cfg.max_nodes
-    pref = -jnp.broadcast_to(order.astype(jnp.float32)[None, :], base_ok.shape)
+    idx, valid, base_ok, scores = _base(state, cfg)
+    pref = _propose_round_robin(state, cfg, rng, idx, valid, base_ok, scores)
     return _finalize(state, cfg, idx, valid, base_ok, pref)
 
 
 def random_fit(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, _ = _base(state, cfg)
-    pref = jax.random.uniform(rng, base_ok.shape)
+    idx, valid, base_ok, scores = _base(state, cfg)
+    pref = _propose_random(state, cfg, rng, idx, valid, base_ok, scores)
     return _finalize(state, cfg, idx, valid, base_ok, pref)
 
 
@@ -131,11 +164,10 @@ def _balance_objective(reserved, total, active):
     return jnp.where(active, (f - mu) ** 2, 0.0).sum() / na
 
 
-def simulated_annealing(state: SimState, cfg: SimConfig, rng: jax.Array,
-                        n_steps: int = 64, t0: float = 0.1) -> SimState:
-    """Anneal a random feasible preference toward balanced placements, then
-    finalise. Objective: post-placement reservation balance."""
-    idx, valid, base_ok, scores = _base(state, cfg)
+def _propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
+                                 scores, n_steps: int = 64, t0: float = 0.1):
+    """Anneal a random feasible preference toward balanced placements.
+    Objective: post-placement reservation balance."""
     P, N = base_ok.shape
     k_init, k_steps = jax.random.split(rng)
     pref = jax.random.uniform(k_init, (P, N))
@@ -170,15 +202,22 @@ def simulated_annealing(state: SimState, cfg: SimConfig, rng: jax.Array,
 
     pref, _, _ = jax.lax.fori_loop(0, n_steps, body,
                                    (pref, energy(pref), k_steps))
+    return pref
+
+
+def simulated_annealing(state: SimState, cfg: SimConfig, rng: jax.Array
+                        ) -> SimState:
+    idx, valid, base_ok, scores = _base(state, cfg)
+    pref = _propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
+                                        scores)
     return _finalize(state, cfg, idx, valid, base_ok, pref)
 
 
-def tabu_search(state: SimState, cfg: SimConfig, rng: jax.Array,
-                n_steps: int = 48, tenure: int = 8) -> SimState:
+def _propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores,
+                         n_steps: int = 48, tenure: int = 8):
     """Tabu search (paper §IV names it among the MASB schedulers): greedy
     local moves on the preference surrogate with a short-term memory that
     forbids revisiting recently-touched (task) coordinates."""
-    idx, valid, base_ok, scores = _base(state, cfg)
     P, N = base_ok.shape
     k_init, k_steps = jax.random.split(rng)
     pref = jnp.where(jnp.isfinite(scores), scores, 0.0) + \
@@ -215,15 +254,20 @@ def tabu_search(state: SimState, cfg: SimConfig, rng: jax.Array,
     _, _, best, _, _ = jax.lax.fori_loop(
         0, n_steps, body, (pref, e0, pref, jnp.zeros((P,), jnp.int32),
                            k_steps))
-    return _finalize(state, cfg, idx, valid, base_ok, best)
+    return best
 
 
-def genetic(state: SimState, cfg: SimConfig, rng: jax.Array,
-            pop: int = 8, gens: int = 4, mut_rate: float = 0.15) -> SimState:
+def tabu_search(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
+    idx, valid, base_ok, scores = _base(state, cfg)
+    pref = _propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores)
+    return _finalize(state, cfg, idx, valid, base_ok, pref)
+
+
+def _propose_genetic(state, cfg, rng, idx, valid, base_ok, scores,
+                     pop: int = 8, gens: int = 4, mut_rate: float = 0.15):
     """Small GA over preference matrices (the paper's 4 GA variants, seeded
     and unseeded, distilled): tournament-free truncation selection + mutation;
     fitness = placement balance of the argmax surrogate."""
-    idx, valid, base_ok, scores = _base(state, cfg)
     P, N = base_ok.shape
     keys = jax.random.split(rng, pop + 1)
     population = jax.vmap(lambda k: jax.random.uniform(k, (P, N)))(keys[:pop])
@@ -257,8 +301,13 @@ def genetic(state: SimState, cfg: SimConfig, rng: jax.Array,
     population, _ = jax.lax.scan(gen_step, population,
                                  jax.random.split(keys[pop], gens))
     fit = jax.vmap(fitness)(population)
-    best = population[jnp.argmax(fit)]
-    return _finalize(state, cfg, idx, valid, base_ok, best)
+    return population[jnp.argmax(fit)]
+
+
+def genetic(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
+    idx, valid, base_ok, scores = _base(state, cfg)
+    pref = _propose_genetic(state, cfg, rng, idx, valid, base_ok, scores)
+    return _finalize(state, cfg, idx, valid, base_ok, pref)
 
 
 SCHEDULERS: Dict[str, Callable] = {
@@ -270,6 +319,19 @@ SCHEDULERS: Dict[str, Callable] = {
     "tabu_search": tabu_search,
     "genetic": genetic,
 }
+
+# proposal-only entry points (pref out, no finalise) + whether _finalize
+# should re-score dynamically — consumed by the scenario fleet's dispatcher
+PROPOSERS: Dict[str, Callable] = {
+    "greedy": _propose_greedy,
+    "first_fit": _propose_first_fit,
+    "round_robin": _propose_round_robin,
+    "random": _propose_random,
+    "simulated_annealing": _propose_simulated_annealing,
+    "tabu_search": _propose_tabu_search,
+    "genetic": _propose_genetic,
+}
+DYNAMIC_BESTFIT: Dict[str, bool] = {n: n == "greedy" for n in SCHEDULERS}
 
 
 def get_scheduler(name: str) -> Callable:

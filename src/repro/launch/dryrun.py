@@ -237,6 +237,15 @@ def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
 # Cost probes
 # ---------------------------------------------------------------------------
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on recent JAX and a
+    one-element list of dicts on older versions; normalise to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _analyze(fn, args, mesh, rules, donate=(), out_shardings=None,
              unroll=None):
     # out_shardings matter: without them XLA may replicate probe outputs
@@ -249,7 +258,7 @@ def _analyze(fn, args, mesh, rules, donate=(), out_shardings=None,
     with mesh, axis_rules(mesh, rules), runtime_flags.scan_unroll(
             **(unroll or {})):
         compiled = jfn.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -498,7 +507,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    full_cost = compiled.cost_analysis() or {}
+    full_cost = _cost_dict(compiled)
     full_colls = parse_collectives(compiled.as_text())
 
     mem_dict = {}

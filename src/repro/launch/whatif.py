@@ -1,0 +1,147 @@
+"""Batched what-if studies over one trace — the scenario-fleet CLI.
+
+  # 2 schedulers x {baseline, 20% outage, half arrivals, usage x2}
+  # = 8 scenarios from ONE parse, one vmapped device program:
+  PYTHONPATH=src python -m repro.launch.whatif --nodes 64 --jobs 120 \
+      --windows 80 --schedulers greedy,first_fit \
+      --outage 0,0.2 --arrival 1.0,0.5
+
+  # capacity planning on a GCD-format trace directory:
+  PYTHONPATH=src python -m repro.launch.whatif --trace-dir /data/gcd \
+      --windows 500 --schedulers greedy --capacity 1.0,0.8,0.6,0.4
+
+Sweep axes multiply (cartesian grid). Every scenario sees the same parsed
+event stream; divergence is injected on-device (repro/scenarios/perturb.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import tempfile
+import time
+
+from repro.config import SimConfig, REDUCED_SIM
+from repro.configs import get_sim_config
+from repro.core import tracegen
+from repro.parsers.gcd import GCDParser
+from repro.scenarios import (ScenarioFleet, ScenarioSpec, expand_grid,
+                             format_table)
+from repro.scenarios.report import to_json
+
+
+def _floats(s: str):
+    return [float(x) for x in s.split(",") if x != ""]
+
+
+def build_cfg(args) -> SimConfig:
+    cfg = get_sim_config() if args.cell_a else REDUCED_SIM
+    over = {}
+    if args.nodes:
+        over["max_nodes"] = args.nodes
+        over.setdefault("max_tasks", max(args.nodes * 16, 512))
+    if args.tasks:
+        over["max_tasks"] = args.tasks
+    if args.use_kernels:
+        over["use_kernels"] = True
+    if not args.cell_a:
+        over.setdefault("max_events_per_window", 4096)
+        over.setdefault("sched_batch", 256)
+    return dataclasses.replace(cfg, **over)
+
+
+def build_specs(args):
+    axes = {"scheduler": args.schedulers.split(",")}
+    if args.outage:
+        axes["node_outage_frac"] = _floats(args.outage)
+    if args.capacity:
+        axes["capacity_scale"] = _floats(args.capacity)
+    if args.arrival:
+        axes["arrival_rate"] = _floats(args.arrival)
+    if args.surge:
+        axes["priority_surge_frac"] = _floats(args.surge)
+    if args.usage_scale:
+        axes["usage_scale"] = _floats(args.usage_scale)
+    if args.storm:
+        axes["evict_storm_frac"] = _floats(args.storm)
+    return expand_grid(**axes)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="batched what-if scenario fleet over one trace")
+    ap.add_argument("--trace-dir", default=None,
+                    help="GCD-format trace dir (default: synthesise one)")
+    ap.add_argument("--cell-a", action="store_true",
+                    help="the paper's 12.5K-node cell configuration")
+    ap.add_argument("--nodes", type=int, default=None)
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--jobs", type=int, default=400)
+    ap.add_argument("--windows", type=int, default=200)
+    ap.add_argument("--schedulers", default="greedy",
+                    help="comma list; every scheduler multiplies the grid")
+    ap.add_argument("--outage", default=None, help="comma list of fractions")
+    ap.add_argument("--capacity", default=None, help="comma list of scales")
+    ap.add_argument("--arrival", default=None,
+                    help="comma list of rates (<1 thins, >1 amplifies)")
+    ap.add_argument("--surge", default=None, help="priority-surge fractions")
+    ap.add_argument("--usage-scale", default=None, help="usage inflations")
+    ap.add_argument("--storm", default=None, help="eviction-storm fractions")
+    ap.add_argument("--baseline", type=int, default=0,
+                    help="scenario index deltas are computed against")
+    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--batch-windows", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write full report here")
+    ap.add_argument("--snapshot", default=None,
+                    help="write a batched fleet snapshot here at the end")
+    args = ap.parse_args(argv)
+
+    cfg = build_cfg(args)
+    specs = build_specs(args)
+    print(f"{len(specs)} scenarios "
+          f"({len(args.schedulers.split(','))} schedulers):")
+    for i, s in enumerate(specs):
+        print(f"  [{i}] {s.name}: {s.describe()}")
+
+    tmp = None
+    trace_dir = args.trace_dir
+    if trace_dir is None:
+        tmp = tempfile.TemporaryDirectory()
+        trace_dir = tmp.name
+        t0 = time.time()
+        summary = tracegen.generate_trace(
+            trace_dir, n_machines=cfg.max_nodes, n_jobs=args.jobs,
+            horizon_windows=args.windows, seed=args.seed,
+            usage_period_us=max(cfg.window_us * 4, 20_000_000))
+        print(f"generated GCD-schema trace: {summary} ({time.time()-t0:.1f}s)")
+
+    t0 = time.time()
+    parser = GCDParser(cfg, trace_dir)
+    source = parser.packed_windows(
+        args.windows, start_us=tracegen.SHIFT_US - cfg.window_us)
+    fleet = ScenarioFleet(cfg, source, specs,
+                          batch_windows=args.batch_windows, seed=args.seed)
+    fleet.run()
+    wall = time.time() - t0
+    sim_s = fleet.windows_done * cfg.window_us / 1e6
+    print(f"simulated {fleet.windows_done} windows x {fleet.n_scenarios} "
+          f"scenarios ({sim_s:.0f} sim-s each) in {wall:.2f}s wall "
+          f"-> {sim_s * fleet.n_scenarios / wall:.1f}x aggregate speed "
+          f"factor, one parse")
+
+    report = fleet.report(baseline=args.baseline)
+    print(format_table(report))
+    if args.json:
+        to_json(report, args.json)
+        print(f"report -> {args.json}")
+    if args.snapshot:
+        fleet.save(args.snapshot)
+        print(f"fleet snapshot -> {args.snapshot}")
+    if tmp:
+        tmp.cleanup()
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -132,6 +132,10 @@ def _apply_gspmd(params, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     # ---- combine ----
     flat_out = jnp.concatenate(
         [out_buf.reshape(E * C, d), jnp.zeros((1, d), x.dtype)], axis=0)
+    # replicate before the gather+scatter-add combine: without this the SPMD
+    # partitioner (observed on the 0.4.x CPU backend, data x model mesh)
+    # keeps per-model-shard partials through the scatter and sums them twice
+    flat_out = logical_constraint(flat_out, None, None)
     y_slots = flat_out[slot] * (w_sorted * keep)[:, None].astype(x.dtype)
     y = jnp.zeros((T, d), jnp.float32).at[token_of].add(y_slots.astype(jnp.float32))
     y = logical_constraint(y.astype(x.dtype), "tokens", None)
@@ -250,12 +254,18 @@ def _apply_shard_map(params, cfg, x, mesh, rules) -> Tuple[jax.Array, jax.Array]
         return y.reshape(Bl, Sl, d).astype(dtype), aux
 
     dpx = dp if len(dp) > 1 else (dp[0] if dp else None)
+    # replication checking was renamed check_rep -> check_vma across JAX
+    # versions; disable whichever this version exposes
+    import inspect
+    sig = inspect.signature(shard_map).parameters
+    check_kw = {"check_vma": False} if "check_vma" in sig else \
+        ({"check_rep": False} if "check_rep" in sig else {})
     out = shard_map(
         inner, mesh=mesh,
         in_specs=(P(dpx, None, None), P(dpx, None),
                   P(tp, dpx, None), P(tp, None, dpx)),
         out_specs=(P(dpx, None, None), P()),
-        check_vma=False,
+        **check_kw,
     )(x, params["router"], wi_p, wo_p)
     return out
 

@@ -1,0 +1,24 @@
+"""Scenario fleet — batched what-if simulation (paper §IV taken further).
+
+AGOCS's reason to exist is what-if research on real cluster traces: the
+§IV MASB use case replays one workload against several schedulers at once.
+This package makes the *scenario* a batch dimension on the device: the trace
+is parsed once, and B divergent scenarios — node outages, capacity changes,
+arrival-rate thinning, priority surges, usage inflation, eviction storms,
+different schedulers — are simulated in a single ``jax.vmap``-ed program
+over a stacked :class:`~repro.core.state.SimState`.
+
+Layout:
+  spec.py    declarative ScenarioSpec + grid expansion -> stacked knobs
+  perturb.py pure-JAX per-scenario transforms of the shared event stream
+  batch.py   vmapped engine step with lax.switch scheduler dispatch
+  runner.py  ScenarioFleet: one parse feeds all B simulations
+  report.py  per-scenario comparative metrics vs. a baseline scenario
+"""
+from repro.scenarios.spec import (ScenarioKnobs, ScenarioSpec, build_knobs,
+                                  expand_grid)
+from repro.scenarios.runner import ScenarioFleet
+from repro.scenarios.report import format_table, scenario_report
+
+__all__ = ["ScenarioSpec", "ScenarioKnobs", "build_knobs", "expand_grid",
+           "ScenarioFleet", "scenario_report", "format_table"]

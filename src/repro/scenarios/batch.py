@@ -1,0 +1,117 @@
+"""Batched what-if engine: B scenarios in ONE device program.
+
+``make_scenario_step`` builds a single-scenario window transition that
+mirrors ``engine.make_window_step`` exactly (same event-application order,
+same accounting recomputes) with two scenario hooks spliced in:
+
+* the incoming window passes through :func:`perturb.perturb_window`;
+* after invalid-placement eviction, :func:`perturb.storm_evict` runs;
+* the scheduler is dispatched with ``lax.switch`` over the scenario's
+  scheduler index, so scenarios may differ in scheduler inside one program.
+
+``run_scenarios`` vmaps that step over the scenario axis — the window batch
+is *broadcast* (parsed once, simulated B ways) — and scans over windows, so
+the whole fleet advances in lock-step on-device. With identity knobs and
+scheduler index 0, lane 0 computes bit-identically to ``engine.run_windows``
+(all perturbation ``where``s select the untouched operand, and the RNG keys
+are derived the same way).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SimConfig
+from repro.core import engine as eng
+from repro.core import stats as stats_mod
+from repro.core.events import EventWindow
+from repro.core.schedulers import (DYNAMIC_BESTFIT, PROPOSERS, _base,
+                                   _finalize, get_scheduler)
+from repro.core.state import SimState, init_state
+from repro.scenarios import perturb
+from repro.scenarios.spec import ScenarioKnobs
+
+
+def init_batched_state(cfg: SimConfig, n_scenarios: int) -> SimState:
+    """A (B, ...)-stacked SimState pytree (B identical empty worlds)."""
+    state = init_state(cfg)
+    return jax.tree.map(
+        lambda x: jnp.tile(x[None], (n_scenarios,) + (1,) * x.ndim), state)
+
+
+def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
+    """Single-scenario (unbatched) step; vmap adds the scenario axis.
+
+    Scheduler dispatch exploits the shared structure of core.schedulers:
+    every scheduler is `_base` (constraint matching + pending top-k) ->
+    per-scheduler *proposal* -> `_finalize` (capacity-checked assignment).
+    Only the cheap proposal goes through ``lax.switch`` — the expensive
+    shared passes run once per lane regardless of how many schedulers the
+    fleet mixes (a vmapped switch executes every branch, so keeping the
+    branches thin matters).
+    """
+    proposers = tuple(PROPOSERS[n] for n in scheduler_names)
+    dyn_table = jnp.asarray([DYNAMIC_BESTFIT[n] for n in scheduler_names])
+
+    def dispatch(state: SimState, rng: jax.Array, idx: jax.Array) -> SimState:
+        if len(proposers) == 1:     # no switch needed — keeps lane 0 trivial
+            return get_scheduler(scheduler_names[0])(state, cfg, rng)
+        pend_idx, valid, base_ok, scores = _base(state, cfg)
+        pref = jax.lax.switch(
+            idx,
+            [lambda s, r, pi, v, bo, sc, fn=fn: fn(s, cfg, r, pi, v, bo, sc)
+             for fn in proposers],
+            state, rng, pend_idx, valid, base_ok, scores)
+        return _finalize(state, cfg, pend_idx, valid, base_ok, pref,
+                         dynamic_bestfit=dyn_table[idx])
+
+    def step(state: SimState, w: EventWindow, rng: jax.Array,
+             knobs: ScenarioKnobs
+             ) -> Tuple[SimState, Dict[str, jax.Array]]:
+        w = perturb.perturb_window(w, knobs, cfg)
+        state = eng.apply_node_events(state, w, cfg)
+        state = eng.apply_task_events(state, w, cfg)
+        state = eng.recompute_accounting(state, cfg)
+        state = eng.evict_invalid(state, cfg)
+        state = perturb.storm_evict(state, knobs, cfg)
+        state = eng.recompute_accounting(state, cfg)
+        state = dispatch(state, rng, knobs.sched_idx)
+        state = eng.recompute_accounting(state, cfg)
+        state = state._replace(window=state.window + 1)
+        return state, stats_mod.window_stats(state, cfg)
+
+    return step
+
+
+def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
+                  cfg: SimConfig, scheduler_names: Tuple[str, ...],
+                  seed: int = 0) -> Tuple[SimState, Dict[str, jax.Array]]:
+    """Scan the vmapped step over stacked windows.
+
+    state: (B, ...) stacked SimState; windows: (W, ...) stacked EventWindow
+    (shared across scenarios); knobs: (B,) ScenarioKnobs.
+    Returns the advanced (B, ...) state and a stats dict of (W, B, ...)
+    arrays. RNG keys are split exactly as in ``engine.run_windows`` and
+    shared across scenarios (common random numbers — the right thing for
+    paired what-if comparisons).
+    """
+    step = make_scenario_step(cfg, scheduler_names)
+    vstep = jax.vmap(step, in_axes=(0, None, None, 0))
+    W = windows.kind.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(seed), W)
+
+    def body(s, xs):
+        w, k = xs
+        return vstep(s, w, k, knobs)
+
+    return jax.lax.scan(body, state, (windows, keys))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scheduler_names"))
+def run_scenarios_jit(state: SimState, windows: EventWindow,
+                      knobs: ScenarioKnobs, cfg: SimConfig,
+                      scheduler_names: Tuple[str, ...], seed: int = 0):
+    return run_scenarios(state, windows, knobs, cfg, scheduler_names, seed)

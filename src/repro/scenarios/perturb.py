@@ -1,0 +1,132 @@
+"""Pure-JAX per-scenario perturbations of the shared event stream.
+
+All scenarios in a fleet consume the SAME parsed ``EventWindow`` tensors (the
+trace is parsed once, on the host); divergence is injected on-device by these
+transforms, which are vmapped over the scenario axis in batch.py. Every
+transform is:
+
+* **deterministic** — membership decisions hash the event's slot (and, for
+  per-window effects, the window counter) through a splitmix32-style mixer,
+  so scenario B=0 today picks the same outage nodes as tomorrow's rerun;
+* **an exact identity at the default knob values** — required for the
+  bit-identity guarantee that lane 0 of a batched run equals the
+  single-trajectory engine (tested in tests/test_scenarios.py);
+* **shape-preserving** — events are masked to ``PAD`` rather than removed,
+  so fixed shapes (and therefore one compiled program) cover all scenarios.
+
+Semantics of the knobs (see spec.ScenarioSpec for the user-facing docs):
+
+* outage: node slots with hash < frac never come up — their ADD_NODE /
+  UPDATE_NODE_RESOURCES events are padded out. Tasks scheduled elsewhere are
+  untouched; nothing ever runs on an outage node.
+* capacity: ADD/UPDATE_NODE payloads are scaled, so the whole cell is
+  uniformly bigger or smaller.
+* arrival thinning (rate < 1): every task event (ADD and its follow-ups) for
+  a thinned slot is padded out — the task never existed in this world.
+* arrival amplification (rate > 1): a 1 - 1/rate fraction of REMOVE_TASK
+  events is suppressed, so tasks overstay and standing load rises. (True
+  event *injection* is impossible under fixed shapes; overstaying is the
+  standard load-amplification proxy.)
+* priority surge: a hashed fraction of arriving tasks get surge_prio.
+* usage inflation: UPDATE_TASK_USED payloads are scaled.
+* eviction storm: each window, a hashed fraction of *running* tasks is
+  forcibly evicted back to pending (applied to state, not events).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SimConfig
+from repro.core.events import EventKind, EventWindow
+from repro.core.state import SimState, TASK_PENDING, TASK_RUNNING
+from repro.scenarios.spec import ScenarioKnobs
+
+# distinct per-knob salt offsets so one slot's fates are independent draws
+_SALT_OUTAGE = 0x1
+_SALT_THIN = 0x2
+_SALT_SUPPRESS = 0x3
+_SALT_SURGE = 0x4
+_SALT_STORM = 0x5
+
+
+def hash01(x: jax.Array, salt: int, cfg: SimConfig) -> jax.Array:
+    """Deterministic int -> [0, 1) float32 (splitmix32-style finalizer)."""
+    h = x.astype(jnp.uint32) ^ jnp.uint32((cfg.scenario_salt + salt) & 0xFFFFFFFF)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x7FEB352D)
+    h = (h ^ (h >> 15)) * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+_TASK_KINDS = (EventKind.ADD_TASK, EventKind.UPDATE_TASK_REQUIRED,
+               EventKind.UPDATE_TASK_USED, EventKind.UPDATE_TASK_CONSTRAINTS,
+               EventKind.REMOVE_TASK)
+
+
+def perturb_window(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig
+                   ) -> EventWindow:
+    """Apply one scenario's event-stream transforms to one window.
+
+    ``k`` holds per-scenario *scalars* here — batch.py vmaps this function
+    over the leading (B,) axis of ScenarioKnobs with ``w`` broadcast.
+    """
+    kind = w.kind
+    is_add_node = kind == EventKind.ADD_NODE
+    is_upd_node = kind == EventKind.UPDATE_NODE_RESOURCES
+    node_cap_ev = is_add_node | is_upd_node
+    is_add_task = kind == EventKind.ADD_TASK
+    is_rem_task = kind == EventKind.REMOVE_TASK
+    is_task_ev = jnp.zeros_like(is_add_task)
+    for tk in _TASK_KINDS:
+        is_task_ev = is_task_ev | (kind == tk)
+
+    # --- node outage: hashed node slots never come up ---
+    outage_hit = hash01(w.slot, _SALT_OUTAGE, cfg) < k.outage_frac
+    drop = node_cap_ev & outage_hit
+
+    # --- capacity scaling on node capacity payloads ---
+    a = jnp.where(node_cap_ev[:, None], w.a * k.capacity_scale, w.a)
+
+    # --- arrival thinning: the whole task (and its follow-up events) goes ---
+    thin_p = 1.0 - jnp.minimum(k.arrival_rate, 1.0)
+    thinned_slot = hash01(w.slot, _SALT_THIN, cfg) < thin_p
+    drop = drop | (is_task_ev & thinned_slot)
+
+    # --- amplification: suppress removals so tasks overstay ---
+    supp_p = 1.0 - 1.0 / jnp.maximum(k.arrival_rate, 1.0)
+    suppressed = hash01(w.slot, _SALT_SUPPRESS, cfg) < supp_p
+    drop = drop | (is_rem_task & suppressed)
+
+    kind = jnp.where(drop, jnp.int8(EventKind.PAD), kind)
+
+    # --- priority surge on surviving arrivals AND requirement updates (an
+    # UPDATE_TASK_REQUIRED rewrites task_prio, so it must stay surged too —
+    # the per-slot hash keeps the decision consistent across a task's events)
+    is_prio_ev = is_add_task | (w.kind == EventKind.UPDATE_TASK_REQUIRED)
+    surged = (is_prio_ev & ~drop &
+              (hash01(w.slot, _SALT_SURGE, cfg) < k.surge_frac))
+    prio = jnp.where(surged, k.surge_prio, w.prio)
+
+    # --- usage inflation ---
+    is_use = w.kind == EventKind.UPDATE_TASK_USED
+    u = jnp.where(is_use[:, None], w.u * k.usage_scale, w.u)
+
+    return w._replace(kind=kind, a=a, prio=prio, u=u)
+
+
+def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:
+    """Per-window eviction storm: force a hashed fraction of running tasks
+    back to pending. The draw mixes the window counter with the task slot so
+    different windows hit different victims, yet reruns are reproducible."""
+    T = cfg.max_tasks
+    slots = jnp.arange(T, dtype=jnp.uint32)
+    mix = (slots * jnp.uint32(0x9E3779B1)
+           + state.window.astype(jnp.uint32) * jnp.uint32(0x85EBCA77))
+    hit = hash01(mix, _SALT_STORM, cfg) < k.storm_frac
+    victim = (state.task_state == TASK_RUNNING) & hit
+    n = jnp.sum(victim).astype(jnp.int32)
+    return state._replace(
+        task_state=jnp.where(victim, jnp.int8(TASK_PENDING), state.task_state),
+        task_node=jnp.where(victim, -1, state.task_node),
+        evictions=state.evictions + n)

@@ -1,0 +1,189 @@
+"""Declarative scenario DSL — low-code what-if configuration (CGSim /
+CloudSim Express argue this is what makes a cloud simulator usable; here a
+spec additionally compiles to one lane of a device-batched program).
+
+A :class:`ScenarioSpec` is a frozen, hashable description of one divergent
+world. :func:`expand_grid` does cartesian sweep expansion; :func:`build_knobs`
+stacks a list of specs into :class:`ScenarioKnobs` — per-scenario scalar
+arrays that ``jax.vmap`` maps over (see batch.py).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, fields, replace
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedulers import SCHEDULERS
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One what-if world. All knobs default to the identity perturbation, so
+    ``ScenarioSpec()`` replays the trace unchanged (the baseline lane).
+
+    node_outage_frac    deterministic fraction of node slots that never come
+                        up (their ADD/UPDATE_NODE events are masked dead)
+    capacity_scale      multiply every node's declared capacity
+    arrival_rate        < 1: thin ADD_TASK arrivals to this fraction;
+                        > 1: amplify load by suppressing a 1 - 1/rate
+                        fraction of task removals (tasks overstay)
+    priority_surge_frac fraction of arriving tasks boosted to surge_priority
+    surge_priority      the priority surged tasks get (GCD: 0..11)
+    usage_scale         inflate reported task usage samples
+    evict_storm_frac    per-window fraction of running tasks force-evicted
+    scheduler           which scheduler this scenario runs (lax.switch lane)
+    """
+    name: str = "baseline"
+    scheduler: str = "greedy"
+    node_outage_frac: float = 0.0
+    capacity_scale: float = 1.0
+    arrival_rate: float = 1.0
+    priority_surge_frac: float = 0.0
+    surge_priority: int = 11
+    usage_scale: float = 1.0
+    evict_storm_frac: float = 0.0
+
+    def __post_init__(self):
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r}; "
+                             f"have {list(SCHEDULERS)}")
+        for f in ("node_outage_frac", "priority_surge_frac",
+                  "evict_storm_frac"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f}={v} outside [0, 1]")
+        for f in ("capacity_scale", "arrival_rate", "usage_scale"):
+            if getattr(self, f) <= 0.0:
+                raise ValueError(f"{f} must be > 0")
+        if not 0 <= self.surge_priority <= 11:
+            raise ValueError("surge_priority outside GCD range 0..11")
+
+    def is_identity(self) -> bool:
+        """True iff this spec perturbs nothing (scheduler choice aside)."""
+        base = ScenarioSpec(name=self.name, scheduler=self.scheduler)
+        return self == base
+
+    def describe(self) -> str:
+        parts = [f"sched={self.scheduler}"]
+        for f, label in _KNOB_LABELS.items():
+            v = getattr(self, f)
+            if v != getattr(_IDENTITY, f):
+                parts.append(f"{label}={v:g}")
+        return " ".join(parts)
+
+
+_IDENTITY = ScenarioSpec()
+_KNOB_LABELS = {
+    "node_outage_frac": "outage",
+    "capacity_scale": "cap",
+    "arrival_rate": "rate",
+    "priority_surge_frac": "surge",
+    "surge_priority": "surge_prio",
+    "usage_scale": "usage",
+    "evict_storm_frac": "storm",
+}
+_FIELD_BY_LABEL = {v: k for k, v in _KNOB_LABELS.items()}
+_FIELD_BY_LABEL["sched"] = "scheduler"
+_FIELD_BY_LABEL["scheduler"] = "scheduler"
+
+
+def expand_grid(base: Optional[ScenarioSpec] = None,
+                **axes: Sequence) -> List[ScenarioSpec]:
+    """Cartesian sweep over spec fields (by field name or short label).
+
+    >>> expand_grid(scheduler=["greedy", "first_fit"],
+    ...             node_outage_frac=[0.0, 0.2])   # 4 scenarios
+
+    Names are auto-derived from the varying axes ("greedy/outage=0.2"); the
+    all-identity corner keeps the base name so it reads as the baseline.
+    """
+    base = base or ScenarioSpec()
+    keys = []
+    for k in axes:
+        field = _FIELD_BY_LABEL.get(k, k)
+        if field not in {f.name for f in fields(ScenarioSpec)}:
+            raise ValueError(f"unknown sweep axis {k!r}")
+        keys.append(field)
+    out: List[ScenarioSpec] = []
+    for combo in itertools.product(*axes.values()):
+        over = dict(zip(keys, combo))
+        spec = replace(base, **over)
+        label_bits = []
+        for f, v in over.items():
+            if f == "scheduler":
+                label_bits.append(str(v))
+            elif v != getattr(_IDENTITY, f):
+                label_bits.append(f"{_KNOB_LABELS[f]}={v:g}")
+        name = "/".join(label_bits) or base.name
+        out.append(replace(spec, name=name))
+    _check_unique([s.name for s in out])
+    return out
+
+
+def one_factor_sweep(base: Optional[ScenarioSpec] = None,
+                     **axes: Sequence) -> List[ScenarioSpec]:
+    """Baseline + one-factor-at-a-time variants (capacity-planning style)."""
+    base = base or ScenarioSpec()
+    out = [base]
+    for k, values in axes.items():
+        field = _FIELD_BY_LABEL.get(k, k)
+        for v in values:
+            if v == getattr(base, field):
+                continue
+            label = str(v) if field == "scheduler" else \
+                f"{_KNOB_LABELS[field]}={v:g}"
+            out.append(replace(base, name=label, **{field: v}))
+    _check_unique([s.name for s in out])
+    return out
+
+
+def _check_unique(names: List[str]):
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise ValueError(f"duplicate scenario names: {sorted(dupes)}")
+
+
+class ScenarioKnobs(NamedTuple):
+    """Per-scenario scalars, stacked to (B,) device arrays — the vmap axis."""
+    sched_idx: jax.Array          # (B,) i32 index into the scheduler tuple
+    outage_frac: jax.Array        # (B,) f32
+    capacity_scale: jax.Array     # (B,) f32
+    arrival_rate: jax.Array       # (B,) f32
+    surge_frac: jax.Array         # (B,) f32
+    surge_prio: jax.Array         # (B,) i32
+    usage_scale: jax.Array        # (B,) f32
+    storm_frac: jax.Array         # (B,) f32
+
+
+def build_knobs(specs: Sequence[ScenarioSpec]
+                ) -> Tuple[ScenarioKnobs, Tuple[str, ...]]:
+    """Stack specs into device knobs + the (static) scheduler dispatch table.
+
+    The scheduler tuple is deduplicated and order-preserving so the
+    ``lax.switch`` in batch.py only carries the branches actually used.
+    """
+    if not specs:
+        raise ValueError("need at least one scenario")
+    sched_names: List[str] = []
+    for s in specs:
+        if s.scheduler not in sched_names:
+            sched_names.append(s.scheduler)
+    knobs = ScenarioKnobs(
+        sched_idx=jnp.asarray([sched_names.index(s.scheduler) for s in specs],
+                              jnp.int32),
+        outage_frac=jnp.asarray([s.node_outage_frac for s in specs],
+                                jnp.float32),
+        capacity_scale=jnp.asarray([s.capacity_scale for s in specs],
+                                   jnp.float32),
+        arrival_rate=jnp.asarray([s.arrival_rate for s in specs], jnp.float32),
+        surge_frac=jnp.asarray([s.priority_surge_frac for s in specs],
+                               jnp.float32),
+        surge_prio=jnp.asarray([s.surge_priority for s in specs], jnp.int32),
+        usage_scale=jnp.asarray([s.usage_scale for s in specs], jnp.float32),
+        storm_frac=jnp.asarray([s.evict_storm_frac for s in specs],
+                               jnp.float32),
+    )
+    return knobs, tuple(sched_names)
