@@ -1,8 +1,10 @@
 """Batched what-if study: parse ONE synthetic GCD trace, then simulate 8
-divergent scenarios (2 schedulers x 4 perturbation worlds) in a single
-vmapped device program, and compare them against the baseline lane.
+divergent scenarios (2 schedulers x 4 perturbation worlds — including a
+doubled-arrival world fed by the injection slot pool) in a single vmapped
+device program, and compare them against the baseline lane.
 
 Run:  PYTHONPATH=src python examples/scenario_sweep.py [--nodes 64]
+      [--mesh N]   # shard the scenario lanes over N devices
 """
 import argparse
 import tempfile
@@ -13,7 +15,7 @@ from repro.core.state import validate_invariants
 from repro.core.tracegen import SHIFT_US, generate_trace
 from repro.parsers.gcd import GCDParser
 from repro.scenarios import (ScenarioFleet, ScenarioSpec, expand_grid,
-                             format_table)
+                             fleet_mesh, format_table)
 
 import jax
 
@@ -23,19 +25,25 @@ def main():
     ap.add_argument("--nodes", type=int, default=64)
     ap.add_argument("--jobs", type=int, default=160)
     ap.add_argument("--windows", type=int, default=100)
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard lanes over an N-device ('data',) mesh")
     args = ap.parse_args()
 
+    # inject_slots reserves rows per window so arrival_rate > 1 lanes can
+    # synthesise real extra SUBMITs (true amplification, not a proxy);
+    # bounded so the auto-sized task-id pool (max_tasks/4) always fits it
     cfg = SimConfig(max_nodes=args.nodes, max_tasks=args.nodes * 24,
                     max_events_per_window=4096, sched_batch=256,
-                    n_attr_slots=12, max_constraints=4)
+                    n_attr_slots=12, max_constraints=4,
+                    inject_slots=min(128, args.nodes * 24 // 4))
     start = SHIFT_US - cfg.window_us
 
-    # 2 schedulers x 4 worlds: baseline, 25% node outage, half the arrivals,
+    # 2 schedulers x 4 worlds: baseline, 25% node outage, doubled arrivals,
     # and an eviction storm — every combination is one vmap lane
     specs = expand_grid(
         scheduler=["greedy", "first_fit"],
         node_outage_frac=[0.0, 0.25],
-        arrival_rate=[1.0, 0.5],
+        arrival_rate=[1.0, 2.0],
     )
     # make one lane a storm world instead of the redundant combined corner
     specs[3] = ScenarioSpec(name="greedy/storm", scheduler="greedy",
@@ -54,9 +62,10 @@ def main():
               f"{summary.n_task_events} task events — parsed ONCE\n")
 
         parser = GCDParser(cfg, d)
+        mesh = fleet_mesh(args.mesh) if args.mesh else None
         fleet = ScenarioFleet(
             cfg, parser.packed_windows(args.windows, start_us=start),
-            specs, batch_windows=25)
+            specs, batch_windows=25, mesh=mesh)
         t0 = time.time()
         fleet.run()
         wall = time.time() - t0

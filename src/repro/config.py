@@ -286,6 +286,53 @@ class SimConfig:
                                       # hashes of the what-if scenario fleet
                                       # (repro/scenarios) — change to resample
                                       # outage/thinning victim sets
+    inject_slots: int = 0             # event rows per window reserved for
+                                      # scenario event *injection* (the last
+                                      # inject_slots rows of every packed
+                                      # window stay PAD; perturb.py fills them
+                                      # with synthesised SUBMITs, so arrival
+                                      # amplification > 1 adds real load)
+    inject_task_slots: int = 0        # task-slot pool reserved for injected
+                                      # tasks at the top of the task table
+                                      # (0 = auto-size from inject_slots);
+                                      # injected slot ids wrap modulo the pool
+
+    def __post_init__(self):
+        if self.inject_slots < 0 or self.inject_task_slots < 0:
+            raise ValueError("inject_slots / inject_task_slots must be >= 0")
+        if self.inject_slots >= self.max_events_per_window:
+            raise ValueError(
+                f"inject_slots={self.inject_slots} leaves no event rows "
+                f"(max_events_per_window={self.max_events_per_window})")
+        pool = self.resolved_inject_task_slots
+        if pool >= self.max_tasks:
+            raise ValueError(
+                f"inject task pool {pool} leaves no real task slots "
+                f"(max_tasks={self.max_tasks})")
+        if self.inject_slots and pool < self.inject_slots:
+            raise ValueError(
+                f"inject task pool {pool} < inject_slots="
+                f"{self.inject_slots}: one window's injections would "
+                "collide with each other")
+
+    @property
+    def resolved_inject_task_slots(self) -> int:
+        """Task-slot pool for injected tasks (auto: 64 windows' worth)."""
+        if not self.inject_slots:
+            return 0
+        return self.inject_task_slots or min(self.max_tasks // 4,
+                                             self.inject_slots * 64)
+
+    @property
+    def real_task_slots(self) -> int:
+        """Task slots available to the parser; [real_task_slots, max_tasks)
+        is the injection pool, so injected ids never collide with trace ids."""
+        return self.max_tasks - self.resolved_inject_task_slots
+
+    @property
+    def events_per_window(self) -> int:
+        """Rows available to parsed (real) events in each packed window."""
+        return self.max_events_per_window - self.inject_slots
 
     def scaled(self, nodes: int, tasks: int) -> "SimConfig":
         return replace(self, max_nodes=nodes, max_tasks=tasks)

@@ -161,15 +161,21 @@ def pack_window(cfg: SimConfig, events: List[HostEvent], window_idx: int
                 ) -> EventWindow:
     """Tensorise one window worth of HostEvents (sorted by time).
 
-    Overflow beyond E events raises — the pipeline splits windows instead
-    (mirrors the paper's hard 1M-event buffer bound).
+    Overflow beyond the real-event budget raises — the pipeline splits
+    windows instead (mirrors the paper's hard 1M-event buffer bound). When
+    ``cfg.inject_slots > 0`` the last ``inject_slots`` rows are a reserved
+    slot pool: they stay PAD here and are filled on-device by the scenario
+    fleet's event synthesis (repro/scenarios/perturb.py), so every window
+    ships with headroom for injected SUBMITs.
     """
     w = empty_window(cfg)
-    E = cfg.max_events_per_window
+    E = cfg.events_per_window
     events = dedup_events(events)
     if len(events) > E:
-        raise ValueError(f"window {window_idx}: {len(events)} events > {E}; "
-                         "increase max_events_per_window or shrink window_us")
+        raise ValueError(f"window {window_idx}: {len(events)} events > {E} "
+                         f"real-event rows ({cfg.inject_slots} reserved for "
+                         "injection); increase max_events_per_window or "
+                         "shrink window_us")
     base = window_idx * cfg.window_us
     events = sorted(events, key=lambda e: e.time_us)
     for i, ev in enumerate(events):

@@ -25,7 +25,13 @@ from repro.core.state import SimState, init_state
 
 
 class WindowPrefetcher:
-    """Bounded-buffer producer/consumer over packed EventWindows."""
+    """Bounded-buffer producer/consumer over packed EventWindows.
+
+    The source may yield single windows (stacked here into device batches of
+    ``batch_windows``) or pre-stacked (W, ...) batches — e.g. straight from
+    ``core.precompile.replay_windows`` — which pass through untouched, so
+    pre-compiled replay skips the host-side restacking copy entirely.
+    """
 
     def __init__(self, cfg: SimConfig, window_iter: Iterator[EventWindow],
                  batch_windows: int = 32):
@@ -43,6 +49,13 @@ class WindowPrefetcher:
         batch: List[EventWindow] = []
         try:
             for w in self._src:
+                if w.kind.ndim == 2:          # pre-stacked (W, E) batch
+                    if batch:                 # keep arrival order
+                        self._q.put(stack_windows(batch))
+                        batch = []
+                    self.events_buffered += int(np.sum(w.n_valid))
+                    self._q.put(w)
+                    continue
                 batch.append(w)
                 self.events_buffered += int(w.n_valid)
                 if len(batch) == self.batch:

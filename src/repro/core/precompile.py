@@ -6,6 +6,15 @@ EventWindow stack to an npz; ``replay_windows`` memory-maps it back. The
 throughput benchmark compares parse-at-runtime (the paper's main design)
 against this pre-compiled replay (the paper predicted it would trade
 flexibility for speed — EXPERIMENTS.md §Fidelity quantifies the gain).
+
+The npz embeds the window-geometry metadata it was packed under (event
+rows, reserved injection slot pool, resource/constraint column counts), so
+consumers — most importantly ``ScenarioFleet.from_precompiled`` — can
+refuse a stack whose shapes or slot-pool reservation don't match their
+config instead of silently mis-simulating. Stacks written with
+``cfg.inject_slots > 0`` are *slot-pool padded*: the last ``inject_slots``
+rows of every window are PAD, ready for on-device event injection, so a
+whole amplification sweep replays with zero parsing.
 """
 from __future__ import annotations
 
@@ -18,6 +27,12 @@ from repro.config import SimConfig
 from repro.core.events import EventWindow, stack_windows
 from repro.parsers.gcd import GCDParser
 
+# config fields that must match between the writer and the consumer for the
+# tensor layout (and the injection slot-pool contract) to line up
+_META_FIELDS = ("max_events_per_window", "inject_slots", "inject_task_slots",
+                "max_tasks", "max_nodes", "n_resources", "n_usage_stats",
+                "max_constraints", "window_us")
+
 
 def precompile_trace(cfg: SimConfig, trace_dir: str, out_path: str,
                      n_windows: int, start_us: int = 0) -> int:
@@ -25,19 +40,69 @@ def precompile_trace(cfg: SimConfig, trace_dir: str, out_path: str,
     windows = list(parser.packed_windows(n_windows, start_us=start_us))
     stacked = stack_windows(windows)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    meta = {f"meta/{name}": np.asarray(getattr(cfg, name), np.int64)
+            for name in _META_FIELDS}
     tmp = out_path + ".tmp"
     with open(tmp, "wb") as f:
-        np.savez_compressed(f, **{f"w/{name}": getattr(stacked, name)
-                                  for name in EventWindow._fields})
+        np.savez_compressed(f, **meta,
+                            **{f"w/{name}": getattr(stacked, name)
+                               for name in EventWindow._fields})
     os.replace(tmp, out_path)
     return len(windows)
 
 
-def replay_windows(path: str, batch: int = 32) -> Iterator[EventWindow]:
-    """Stream batches straight from the persisted tensors (zero parsing)."""
+def validate_replay(path: str, cfg: SimConfig):
+    """Raise if a pre-compiled stack doesn't match ``cfg``'s window layout.
+
+    Stacks from before the metadata was embedded are accepted as long as
+    both sides agree there is no injection slot pool.
+    """
+    with np.load(path, mmap_mode="r") as z:
+        has_meta = any(k.startswith("meta/") for k in z.files)
+        mismatches = {}
+        for name in _META_FIELDS:
+            want = int(getattr(cfg, name))
+            got = int(z[f"meta/{name}"]) if has_meta else \
+                (z["w/kind"].shape[1] if name == "max_events_per_window"
+                 else (0 if name in ("inject_slots", "inject_task_slots")
+                       else want))
+            if got != want:
+                mismatches[name] = (got, want)
+    if mismatches:
+        detail = ", ".join(f"{k}: stack has {g}, config wants {w}"
+                           for k, (g, w) in mismatches.items())
+        raise ValueError(f"pre-compiled stack {path} doesn't match the "
+                         f"config ({detail}) — re-run precompile_trace")
+
+
+def replay_config(path: str, cfg: SimConfig) -> SimConfig:
+    """``cfg`` with the stack's embedded window geometry applied.
+
+    A replay consumer cannot re-shape persisted tensors, so the writer's
+    layout (event rows, injection pool, column counts) wins over whatever
+    the consumer configured — this is how the CLI's ``--replay`` mode
+    guarantees ``validate_replay`` passes. Pre-metadata stacks are assumed
+    to have been written without an injection pool.
+    """
+    import dataclasses
+    with np.load(path, mmap_mode="r") as z:
+        if not any(k.startswith("meta/") for k in z.files):
+            return dataclasses.replace(
+                cfg, max_events_per_window=int(z["w/kind"].shape[1]),
+                inject_slots=0, inject_task_slots=0)
+        over = {name: int(z[f"meta/{name}"]) for name in _META_FIELDS}
+    return dataclasses.replace(cfg, **over)
+
+
+def replay_windows(path: str, batch: int = 32,
+                   n_windows: Optional[int] = None) -> Iterator[EventWindow]:
+    """Stream batches straight from the persisted tensors (zero parsing),
+    optionally truncated to the first ``n_windows`` windows."""
     with np.load(path, mmap_mode="r") as z:
         fields = {name: z[f"w/{name}"] for name in EventWindow._fields}
         n = fields["kind"].shape[0]
+        if n_windows is not None:
+            n = min(n, n_windows)
         for lo in range(0, n, batch):
             hi = min(lo + batch, n)
             yield EventWindow(*[np.asarray(fields[name][lo:hi])

@@ -10,6 +10,22 @@
   PYTHONPATH=src python -m repro.launch.whatif --trace-dir /data/gcd \
       --windows 500 --schedulers greedy --capacity 1.0,0.8,0.6,0.4
 
+  # shard 64 lanes over 8 (fake) CPU devices, with true arrival
+  # amplification via the reserved injection slot pool:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.whatif --windows 80 \
+      --schedulers greedy,first_fit --arrival 0.5,1.0,1.5,2.0 \
+      --outage 0,0.1,0.2,0.3 --mesh 8
+
+  # pre-compile the trace once (reserving injection headroom so later
+  # replays can amplify), then replay sweeps with zero parsing — in replay
+  # mode the window geometry comes from the stack, not from flags:
+  PYTHONPATH=src python -m repro.launch.whatif --trace-dir /data/gcd \
+      --windows 500 --precompile /tmp/gcd.npz --inject-slots 64 \
+      --capacity 1.0,0.8
+  PYTHONPATH=src python -m repro.launch.whatif --replay /tmp/gcd.npz \
+      --windows 500 --arrival 1.0,1.5,2.0
+
 Sweep axes multiply (cartesian grid). Every scenario sees the same parsed
 event stream; divergence is injected on-device (repro/scenarios/perturb.py).
 """
@@ -24,9 +40,10 @@ import time
 from repro.config import SimConfig, REDUCED_SIM
 from repro.configs import get_sim_config
 from repro.core import tracegen
+from repro.core.precompile import precompile_trace
 from repro.parsers.gcd import GCDParser
 from repro.scenarios import (ScenarioFleet, ScenarioSpec, expand_grid,
-                             format_table)
+                             fleet_mesh, format_table)
 from repro.scenarios.report import to_json
 
 
@@ -47,6 +64,16 @@ def build_cfg(args) -> SimConfig:
     if not args.cell_a:
         over.setdefault("max_events_per_window", 4096)
         over.setdefault("sched_batch", 256)
+    inject = args.inject_slots
+    if inject is None and args.arrival and max(_floats(args.arrival)) > 1.0:
+        # amplification needs reserved rows; default to 1/8 of the window,
+        # bounded so the auto-sized task-slot pool (max_tasks/4) holds at
+        # least one window's worth of injections
+        E = over.get("max_events_per_window") or cfg.max_events_per_window
+        T = over.get("max_tasks") or cfg.max_tasks
+        inject = max(1, min(E // 8, T // 4))
+    if inject:
+        over["inject_slots"] = inject
     return dataclasses.replace(cfg, **over)
 
 
@@ -92,13 +119,42 @@ def main(argv=None):
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--batch-windows", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="shard lanes over an N-device ('data',) mesh "
+                         "(an integer, or 'auto' for every device); specs "
+                         "are padded up to a multiple of the device count")
+    ap.add_argument("--inject-slots", type=int, default=None,
+                    help="event rows per window reserved for SUBMIT "
+                         "injection (default: auto-sized when any "
+                         "--arrival rate > 1)")
+    ap.add_argument("--precompile", default=None,
+                    help="pre-compile the trace to this npz (§V-A), then "
+                         "replay the sweep from it")
+    ap.add_argument("--replay", default=None,
+                    help="feed the fleet from an existing pre-compiled npz "
+                         "(zero parsing; overrides --trace-dir)")
     ap.add_argument("--json", default=None, help="write full report here")
     ap.add_argument("--snapshot", default=None,
                     help="write a batched fleet snapshot here at the end")
     args = ap.parse_args(argv)
 
     cfg = build_cfg(args)
+    if args.replay:
+        # replay can't re-shape persisted tensors: the stack's embedded
+        # window geometry (incl. the injection slot pool) wins over flags
+        from repro.core.precompile import replay_config
+        cfg = replay_config(args.replay, cfg)
+        print(f"replaying {args.replay}: window geometry from the stack "
+              f"(E={cfg.max_events_per_window}, "
+              f"inject_slots={cfg.inject_slots})")
     specs = build_specs(args)
+    mesh = None
+    if args.mesh:
+        mesh = fleet_mesh(None if args.mesh == "auto" else int(args.mesh))
+        n_dev = mesh.devices.size
+        print(f"mesh: {n_dev} devices over ('data',)"
+              + (f", padding {(-len(specs)) % n_dev} lanes"
+                 if len(specs) % n_dev else ""))
     print(f"{len(specs)} scenarios "
           f"({len(args.schedulers.split(','))} schedulers):")
     for i, s in enumerate(specs):
@@ -106,7 +162,7 @@ def main(argv=None):
 
     tmp = None
     trace_dir = args.trace_dir
-    if trace_dir is None:
+    if trace_dir is None and args.replay is None:
         tmp = tempfile.TemporaryDirectory()
         trace_dir = tmp.name
         t0 = time.time()
@@ -116,19 +172,35 @@ def main(argv=None):
             usage_period_us=max(cfg.window_us * 4, 20_000_000))
         print(f"generated GCD-schema trace: {summary} ({time.time()-t0:.1f}s)")
 
+    start = tracegen.SHIFT_US - cfg.window_us
+    replay_path = args.replay
+    if args.precompile and replay_path is None:
+        t0 = time.time()
+        n = precompile_trace(cfg, trace_dir, args.precompile, args.windows,
+                             start_us=start)
+        print(f"pre-compiled {n} windows -> {args.precompile} "
+              f"({time.time()-t0:.1f}s)")
+        replay_path = args.precompile
+
     t0 = time.time()
-    parser = GCDParser(cfg, trace_dir)
-    source = parser.packed_windows(
-        args.windows, start_us=tracegen.SHIFT_US - cfg.window_us)
-    fleet = ScenarioFleet(cfg, source, specs,
-                          batch_windows=args.batch_windows, seed=args.seed)
+    if replay_path is not None:
+        fleet = ScenarioFleet.from_precompiled(
+            cfg, replay_path, specs, batch_windows=args.batch_windows,
+            seed=args.seed, mesh=mesh, n_windows=args.windows)
+    else:
+        parser = GCDParser(cfg, trace_dir)
+        source = parser.packed_windows(args.windows, start_us=start)
+        fleet = ScenarioFleet(cfg, source, specs,
+                              batch_windows=args.batch_windows,
+                              seed=args.seed, mesh=mesh)
     fleet.run()
     wall = time.time() - t0
     sim_s = fleet.windows_done * cfg.window_us / 1e6
     print(f"simulated {fleet.windows_done} windows x {fleet.n_scenarios} "
-          f"scenarios ({sim_s:.0f} sim-s each) in {wall:.2f}s wall "
+          f"scenarios ({sim_s:.0f} sim-s each, {fleet.n_lanes} device lanes) "
+          f"in {wall:.2f}s wall "
           f"-> {sim_s * fleet.n_scenarios / wall:.1f}x aggregate speed "
-          f"factor, one parse")
+          f"factor, {'zero parses' if replay_path else 'one parse'}")
 
     report = fleet.report(baseline=args.baseline)
     print(format_table(report))

@@ -203,11 +203,9 @@ def _local_dispatch(x2d, weights, expert_idx, keep_mask, wi, wo, e_lo, E_loc,
 
 
 def _apply_shard_map(params, cfg, x, mesh, rules) -> Tuple[jax.Array, jax.Array]:
-    try:
-        from jax import shard_map  # jax >= 0.7
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+    from repro.distributed.sharding import import_shard_map
     from jax.sharding import PartitionSpec as P
+    shard_map, check_kw = import_shard_map()
 
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     tp = "model"
@@ -254,12 +252,6 @@ def _apply_shard_map(params, cfg, x, mesh, rules) -> Tuple[jax.Array, jax.Array]
         return y.reshape(Bl, Sl, d).astype(dtype), aux
 
     dpx = dp if len(dp) > 1 else (dp[0] if dp else None)
-    # replication checking was renamed check_rep -> check_vma across JAX
-    # versions; disable whichever this version exposes
-    import inspect
-    sig = inspect.signature(shard_map).parameters
-    check_kw = {"check_vma": False} if "check_vma" in sig else \
-        ({"check_rep": False} if "check_rep" in sig else {})
     out = shard_map(
         inner, mesh=mesh,
         in_specs=(P(dpx, None, None), P(dpx, None),

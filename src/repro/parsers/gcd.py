@@ -20,6 +20,7 @@ import glob
 import gzip
 import heapq
 import os
+import zlib
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -82,7 +83,12 @@ class SlotAllocator:
 
 
 class AttrVocab:
-    """Obfuscated attribute-name -> column-slot mapping (host side)."""
+    """Obfuscated attribute-name -> column-slot mapping (host side).
+
+    Hashes use crc32, NOT Python's ``hash`` — str hashing is randomised per
+    process (PYTHONHASHSEED), which made re-runs of the same trace simulate
+    slightly different worlds whenever attribute strings were non-numeric.
+    """
 
     def __init__(self, n_slots: int, stats: ParseStats):
         self.n = n_slots
@@ -94,7 +100,7 @@ class AttrVocab:
         if s is None:
             if len(self.map) >= self.n:
                 self.stats.attr_overflow += 1
-                s = hash(name) % self.n
+                s = zlib.crc32(name.encode()) % self.n
             else:
                 s = len(self.map)
             self.map[name] = s
@@ -107,7 +113,7 @@ class AttrVocab:
         try:
             return int(v) & 0x7FFFFFFF
         except ValueError:
-            return (hash(v) & 0x7FFFFF) + 1
+            return (zlib.crc32(v.encode()) & 0x7FFFFF) + 1
 
 
 def _open(path: str):
@@ -151,7 +157,9 @@ class GCDParser:
         self.cfg = cfg
         self.dir = trace_dir
         self.stats = ParseStats()
-        self.tasks = SlotAllocator(cfg.max_tasks, self.stats)
+        # real tasks only get slots below the injection pool, so on-device
+        # synthesised SUBMITs (cfg.inject_slots) never collide with trace ids
+        self.tasks = SlotAllocator(cfg.real_task_slots, self.stats)
         self.nodes = SlotAllocator(cfg.max_nodes, self.stats)
         self.attrs = AttrVocab(cfg.n_attr_slots, self.stats)
         self.jobs: Dict[int, int] = {}
@@ -302,7 +310,7 @@ class GCDParser:
         for w_idx, evs in gen:
             if produced >= n_windows:
                 break
-            E = self.cfg.max_events_per_window
+            E = self.cfg.events_per_window
             chunks = [evs[i:i + E] for i in range(0, max(len(evs), 1), E)]
             for ch in chunks:
                 if produced >= n_windows:

@@ -11,14 +11,17 @@ over a stacked :class:`~repro.core.state.SimState`.
 Layout:
   spec.py    declarative ScenarioSpec + grid expansion -> stacked knobs
   perturb.py pure-JAX per-scenario transforms of the shared event stream
-  batch.py   vmapped engine step with lax.switch scheduler dispatch
-  runner.py  ScenarioFleet: one parse feeds all B simulations
+             (incl. SUBMIT injection into the reserved slot pool)
+  batch.py   vmapped engine step with lax.switch scheduler dispatch, plus
+             the shard_map wrapper that splits lanes over a ('data',) mesh
+  runner.py  ScenarioFleet: one parse (or pre-compiled npz) feeds all lanes
   report.py  per-scenario comparative metrics vs. a baseline scenario
 """
 from repro.scenarios.spec import (ScenarioKnobs, ScenarioSpec, build_knobs,
                                   expand_grid)
+from repro.scenarios.batch import fleet_mesh
 from repro.scenarios.runner import ScenarioFleet
 from repro.scenarios.report import format_table, scenario_report
 
 __all__ = ["ScenarioSpec", "ScenarioKnobs", "build_knobs", "expand_grid",
-           "ScenarioFleet", "scenario_report", "format_table"]
+           "ScenarioFleet", "fleet_mesh", "scenario_report", "format_table"]

@@ -15,16 +15,25 @@ the whole fleet advances in lock-step on-device. With identity knobs and
 scheduler index 0, lane 0 computes bit-identically to ``engine.run_windows``
 (all perturbation ``where``s select the untouched operand, and the RNG keys
 are derived the same way).
+
+``run_scenarios_sharded`` wraps the same program in ``shard_map`` over the
+``'data'`` axis of a 1-D device mesh: the B scenario lanes are split across
+devices (vmap inside each shard), the window batch is broadcast to every
+device, and per-lane stats are gathered back along the scenario axis. Lanes
+never communicate, so per-lane results are identical to the pure-vmap path
+(tested in tests/test_scenarios_sharded.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import SimConfig
+from repro.distributed.sharding import import_shard_map
 from repro.core import engine as eng
 from repro.core import stats as stats_mod
 from repro.core.events import EventWindow
@@ -34,12 +43,46 @@ from repro.core.state import SimState, init_state
 from repro.scenarios import perturb
 from repro.scenarios.spec import ScenarioKnobs
 
+FLEET_AXIS = "data"   # the mesh axis the scenario lanes shard over
 
-def init_batched_state(cfg: SimConfig, n_scenarios: int) -> SimState:
-    """A (B, ...)-stacked SimState pytree (B identical empty worlds)."""
+
+def fleet_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """A 1-D ('data',) mesh over the first ``n_devices`` (default: all)."""
+    n = jax.device_count() if n_devices is None else n_devices
+    if n < 1:
+        raise ValueError(f"fleet_mesh needs at least 1 device, got {n}")
+    if n > jax.device_count():
+        raise ValueError(f"--mesh {n} > {jax.device_count()} devices "
+                         "(on CPU, fake devices need XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh((n,), (FLEET_AXIS,))
+
+
+def shard_over_fleet(tree, mesh: Optional[Mesh]):
+    """Place every leaf's leading (lane) axis on the FLEET_AXIS shards.
+
+    The one place the fleet's lane sharding is defined — knobs, batched
+    states and restored snapshots all go through here. No-op without a mesh.
+    """
+    if mesh is None:
+        return tree
+    sh = NamedSharding(mesh, P(FLEET_AXIS))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def init_batched_state(cfg: SimConfig, n_scenarios: int,
+                       mesh: Optional[Mesh] = None) -> SimState:
+    """A (B, ...)-stacked SimState pytree (B identical empty worlds).
+
+    Built with ``broadcast_to`` — a zero-copy view the device program
+    materialises lane-sharded — never ``jnp.tile``, which would eagerly
+    allocate B full copies before transfer (regression-tested). Under a
+    ``mesh`` the leading axis is placed on the FLEET_AXIS shards directly.
+    """
     state = init_state(cfg)
-    return jax.tree.map(
-        lambda x: jnp.tile(x[None], (n_scenarios,) + (1,) * x.ndim), state)
+    batched = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_scenarios,) + x.shape), state)
+    return shard_over_fleet(batched, mesh)
 
 
 def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
@@ -71,7 +114,13 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
     def step(state: SimState, w: EventWindow, rng: jax.Array,
              knobs: ScenarioKnobs
              ) -> Tuple[SimState, Dict[str, jax.Array]]:
-        w = perturb.perturb_window(w, knobs, cfg)
+        w = perturb.perturb_window(w, knobs, cfg, window=state.window)
+        if cfg.inject_slots:
+            injected = jnp.sum(w.kind[-cfg.inject_slots:]
+                               == jnp.int8(eng.EventKind.ADD_TASK)
+                               ).astype(jnp.int32)
+        else:
+            injected = jnp.int32(0)
         state = eng.apply_node_events(state, w, cfg)
         state = eng.apply_task_events(state, w, cfg)
         state = eng.recompute_accounting(state, cfg)
@@ -81,7 +130,9 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
         state = dispatch(state, rng, knobs.sched_idx)
         state = eng.recompute_accounting(state, cfg)
         state = state._replace(window=state.window + 1)
-        return state, stats_mod.window_stats(state, cfg)
+        stats = stats_mod.window_stats(state, cfg)
+        stats["injected_arrivals"] = injected
+        return state, stats
 
     return step
 
@@ -115,3 +166,43 @@ def run_scenarios_jit(state: SimState, windows: EventWindow,
                       knobs: ScenarioKnobs, cfg: SimConfig,
                       scheduler_names: Tuple[str, ...], seed: int = 0):
     return run_scenarios(state, windows, knobs, cfg, scheduler_names, seed)
+
+
+def run_scenarios_sharded(state: SimState, windows: EventWindow,
+                          knobs: ScenarioKnobs, cfg: SimConfig,
+                          scheduler_names: Tuple[str, ...], mesh: Mesh,
+                          seed: int = 0
+                          ) -> Tuple[SimState, Dict[str, jax.Array]]:
+    """``run_scenarios`` with the scenario axis split over a device mesh.
+
+    state/knobs are sharded over FLEET_AXIS (B must divide by the mesh
+    size — ScenarioFleet pads specs up); windows are replicated to every
+    device; the (W, B, ...) stats gather back along axis 1. Each shard runs
+    the plain vmapped program on its B/n local lanes with the same RNG key
+    schedule, so per-lane results match the single-device path exactly.
+    """
+    shard_map, check_kw = import_shard_map()
+    B = jax.tree.leaves(state)[0].shape[0]
+    n_dev = mesh.shape[FLEET_AXIS]
+    if B % n_dev:
+        raise ValueError(f"B={B} lanes not divisible by the {n_dev}-device "
+                         f"'{FLEET_AXIS}' mesh axis — pad the spec list")
+
+    def body(s, w, k):
+        return run_scenarios(s, w, k, cfg, scheduler_names, seed)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(FLEET_AXIS), P(), P(FLEET_AXIS)),
+                   out_specs=(P(FLEET_AXIS), P(None, FLEET_AXIS)),
+                   **check_kw)
+    return fn(state, windows, knobs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "scheduler_names", "mesh"))
+def run_scenarios_sharded_jit(state: SimState, windows: EventWindow,
+                              knobs: ScenarioKnobs, cfg: SimConfig,
+                              scheduler_names: Tuple[str, ...], mesh: Mesh,
+                              seed: int = 0):
+    return run_scenarios_sharded(state, windows, knobs, cfg, scheduler_names,
+                                 mesh, seed)

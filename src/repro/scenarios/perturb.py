@@ -23,10 +23,16 @@ Semantics of the knobs (see spec.ScenarioSpec for the user-facing docs):
   uniformly bigger or smaller.
 * arrival thinning (rate < 1): every task event (ADD and its follow-ups) for
   a thinned slot is padded out — the task never existed in this world.
-* arrival amplification (rate > 1): a 1 - 1/rate fraction of REMOVE_TASK
-  events is suppressed, so tasks overstay and standing load rises. (True
-  event *injection* is impossible under fixed shapes; overstaying is the
-  standard load-amplification proxy.)
+* arrival amplification (rate > 1): extra SUBMIT events are *synthesised*
+  into the window's reserved slot pool (``cfg.inject_slots`` rows at the
+  tail of every packed window, kept PAD by the host packer). Each injected
+  task is cloned from a deterministically sampled surviving real arrival —
+  same requirements/priority/constraints, fresh task id from the reserved
+  pool [cfg.real_task_slots, cfg.max_tasks) — so amplification genuinely
+  adds schedulable load instead of the old removal-suppression proxy. The
+  per-window injected count is round((rate - 1) * n_arrivals), capped at
+  inject_slots; injected ids wrap modulo the pool, so a very long run
+  recycles (re-submits) its oldest injected tasks rather than overflowing.
 * priority surge: a hashed fraction of arriving tasks get surge_prio.
 * usage inflation: UPDATE_TASK_USED payloads are scaled.
 * eviction storm: each window, a hashed fraction of *running* tasks is
@@ -45,9 +51,9 @@ from repro.scenarios.spec import ScenarioKnobs
 # distinct per-knob salt offsets so one slot's fates are independent draws
 _SALT_OUTAGE = 0x1
 _SALT_THIN = 0x2
-_SALT_SUPPRESS = 0x3
 _SALT_SURGE = 0x4
 _SALT_STORM = 0x5
+_SALT_INJECT = 0x6
 
 
 def hash01(x: jax.Array, salt: int, cfg: SimConfig) -> jax.Array:
@@ -64,19 +70,20 @@ _TASK_KINDS = (EventKind.ADD_TASK, EventKind.UPDATE_TASK_REQUIRED,
                EventKind.REMOVE_TASK)
 
 
-def perturb_window(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig
-                   ) -> EventWindow:
+def perturb_window(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig,
+                   window: jax.Array = None) -> EventWindow:
     """Apply one scenario's event-stream transforms to one window.
 
     ``k`` holds per-scenario *scalars* here — batch.py vmaps this function
     over the leading (B,) axis of ScenarioKnobs with ``w`` broadcast.
+    ``window`` is the scalar window counter (state.window), which seeds the
+    per-window injection draws; it defaults to 0 for unit tests.
     """
     kind = w.kind
     is_add_node = kind == EventKind.ADD_NODE
     is_upd_node = kind == EventKind.UPDATE_NODE_RESOURCES
     node_cap_ev = is_add_node | is_upd_node
     is_add_task = kind == EventKind.ADD_TASK
-    is_rem_task = kind == EventKind.REMOVE_TASK
     is_task_ev = jnp.zeros_like(is_add_task)
     for tk in _TASK_KINDS:
         is_task_ev = is_task_ev | (kind == tk)
@@ -93,11 +100,6 @@ def perturb_window(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig
     thinned_slot = hash01(w.slot, _SALT_THIN, cfg) < thin_p
     drop = drop | (is_task_ev & thinned_slot)
 
-    # --- amplification: suppress removals so tasks overstay ---
-    supp_p = 1.0 - 1.0 / jnp.maximum(k.arrival_rate, 1.0)
-    suppressed = hash01(w.slot, _SALT_SUPPRESS, cfg) < supp_p
-    drop = drop | (is_rem_task & suppressed)
-
     kind = jnp.where(drop, jnp.int8(EventKind.PAD), kind)
 
     # --- priority surge on surviving arrivals AND requirement updates (an
@@ -112,7 +114,77 @@ def perturb_window(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig
     is_use = w.kind == EventKind.UPDATE_TASK_USED
     u = jnp.where(is_use[:, None], w.u * k.usage_scale, w.u)
 
-    return w._replace(kind=kind, a=a, prio=prio, u=u)
+    w = w._replace(kind=kind, a=a, prio=prio, u=u)
+
+    # --- arrival amplification (rate > 1): synthesise SUBMITs into the
+    # reserved slot pool, cloned from the post-perturbation stream (so
+    # injected tasks inherit surged priorities / scaled payloads)
+    if cfg.inject_slots:
+        if window is None:
+            window = jnp.int32(0)
+        w = inject_arrivals(w, k, cfg, window)
+    return w
+
+
+def inject_arrivals(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig,
+                    window: jax.Array) -> EventWindow:
+    """Fill the window's reserved tail rows with synthesised SUBMIT events.
+
+    round((rate - 1) * n_arrivals) clones (capped at ``cfg.inject_slots``)
+    of deterministically sampled surviving real arrivals are written into
+    rows [E - inject_slots, E), with fresh task ids drawn round-robin from
+    the reserved pool [cfg.real_task_slots, max_tasks). At rate <= 1 (or
+    with no surviving arrivals) every reserved row is written back with its
+    original bits, keeping the lane-0 identity guarantee exact.
+    """
+    S = cfg.inject_slots
+    E = w.kind.shape[0]
+    rows = jnp.arange(E - S, E)
+    j = jnp.arange(S, dtype=jnp.uint32)
+
+    # surviving real arrivals are the cloning sources (reserved rows are
+    # still PAD at this point, so they can't self-select)
+    arrive = w.kind == jnp.int8(EventKind.ADD_TASK)
+    n_arr = jnp.sum(arrive).astype(jnp.int32)
+    n_inj = jnp.clip(
+        jnp.round((k.arrival_rate - 1.0) * n_arr.astype(jnp.float32))
+        .astype(jnp.int32), 0, S)
+    active = (j.astype(jnp.int32) < n_inj) & (n_arr > 0)
+
+    # pick the u*n_arr-th surviving arrival for each reserved row — the draw
+    # mixes the window counter with the row index, so reruns are reproducible
+    # and different windows sample different sources
+    mix = (window.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+           + j * jnp.uint32(0x85EBCA77))
+    pick = jnp.floor(hash01(mix, _SALT_INJECT, cfg)
+                     * n_arr.astype(jnp.float32)).astype(jnp.int32)
+    pick = jnp.clip(pick, 0, jnp.maximum(n_arr - 1, 0))
+    src = jnp.clip(jnp.searchsorted(jnp.cumsum(arrive.astype(jnp.int32)),
+                                    pick + 1), 0, E - 1)
+
+    # fresh ids round-robin through the reserved pool: distinct within a
+    # window (pool >= S is validated by SimConfig), wrapping across windows
+    pool = cfg.resolved_inject_task_slots
+    islot = (cfg.real_task_slots
+             + (window * S + jnp.arange(S, dtype=jnp.int32)) % pool)
+
+    def put(col, new):
+        cur = col[rows]
+        mask = active.reshape((S,) + (1,) * (cur.ndim - 1))
+        return col.at[rows].set(jnp.where(mask, new, cur))
+
+    return w._replace(
+        kind=put(w.kind, jnp.int8(EventKind.ADD_TASK)),
+        slot=put(w.slot, islot),
+        a=put(w.a, w.a[src]),
+        u=put(w.u, w.u[src]),
+        prio=put(w.prio, w.prio[src]),
+        job=put(w.job, w.job[src]),
+        constraints=put(w.constraints, w.constraints[src]),
+        attr_idx=put(w.attr_idx, w.attr_idx[src]),
+        attr_val=put(w.attr_val, w.attr_val[src]),
+        t_off=put(w.t_off, w.t_off[src]),
+    )
 
 
 def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:

@@ -40,6 +40,9 @@ def scenario_report(names: Sequence[str], frame: Dict[str, np.ndarray],
             "placements": int(_col(frame, "placements", b)[-1]),
             "completions": int(_col(frame, "completions", b)[-1]),
             "evictions": int(_col(frame, "evictions", b)[-1]),
+            # per-window counts, so the cumulative total is the sum
+            "injected": (int(_col(frame, "injected_arrivals", b).sum())
+                         if "injected_arrivals" in frame else 0),
             "pending_final": int(_col(frame, "n_pending", b)[-1]),
             "pending_mean": float(_col(frame, "n_pending", b).mean()),
             "running_final": int(_col(frame, "n_running", b)[-1]),
@@ -73,6 +76,7 @@ _COLUMNS = (
     ("placed", "placements", "{}"),
     ("done", "completions", "{}"),
     ("evict", "evictions", "{}"),
+    ("inj", "injected", "{}"),
     ("pend", "pending_final", "{}"),
     ("cpu_res", "cpu_reserved_frac_mean", "{:.3f}"),
     ("cpu_use", "cpu_used_frac_mean", "{:.3f}"),

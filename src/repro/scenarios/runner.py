@@ -7,12 +7,24 @@ device program advances a (B, ...)-stacked SimState: the host parses and
 tensorises each window batch once and every scenario consumes it. Parse cost
 is amortised B ways — the paper's §IV "multiple schedulers, one workload"
 use case generalised to arbitrary what-if perturbations.
+
+Two scaling paths ride on top of the vmapped program:
+
+* ``mesh=`` shards the scenario axis over a 1-D ``('data',)`` device mesh
+  via ``shard_map`` (vmap inside each shard, windows broadcast, per-lane
+  stats gathered back). The spec list is padded up to a multiple of the
+  device count with inert identity lanes; padding lanes are invisible in
+  stats, reports and snapshots.
+* :meth:`from_precompiled` feeds the fleet from a §V-A pre-compiled npz
+  (core/precompile.py) — whole sweeps replay with zero parsing.
 """
 from __future__ import annotations
 
 from typing import Iterator, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.config import SimConfig
 from repro.core.events import EventWindow
@@ -28,31 +40,83 @@ class ScenarioFleet(WindowedDriver):
 
     >>> specs = expand_grid(scheduler=["greedy", "first_fit"],
     ...                     node_outage_frac=[0.0, 0.2])
-    >>> fleet = ScenarioFleet(cfg, parser.packed_windows(200), specs)
+    >>> fleet = ScenarioFleet(cfg, parser.packed_windows(200), specs,
+    ...                       mesh=batch.fleet_mesh())   # mesh is optional
     >>> fleet.run()
     >>> print(format_table(fleet.report()))
     """
 
     def __init__(self, cfg: SimConfig, window_source: Iterator[EventWindow],
                  specs: Sequence[ScenarioSpec], batch_windows: int = 32,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None, mesh: Optional[Mesh] = None):
         super().__init__(cfg, window_source, batch_windows, seed)
         self.specs = list(specs)
-        self.knobs, self.scheduler_names = build_knobs(self.specs)
-        self.state = batch_mod.init_batched_state(cfg, len(self.specs))
+        if not cfg.inject_slots:
+            amped = [s.name for s in self.specs if s.arrival_rate > 1.0]
+            if amped:
+                raise ValueError(
+                    f"scenarios {amped} have arrival_rate > 1 but "
+                    "cfg.inject_slots == 0: amplification synthesises SUBMIT "
+                    "events into the reserved slot pool, so the windows must "
+                    "be packed with inject_slots > 0")
+        self.mesh = mesh
+        lanes = list(self.specs)
+        if mesh is not None:
+            n_dev = mesh.shape[batch_mod.FLEET_AXIS]
+            # pad to a lane count the mesh divides; padding lanes reuse the
+            # first spec's scheduler so the lax.switch table doesn't grow
+            for i in range((-len(lanes)) % n_dev):
+                lanes.append(ScenarioSpec(name=f"_pad{i}",
+                                          scheduler=lanes[0].scheduler))
+        self._lane_specs = lanes
+        self.knobs, self.scheduler_names = build_knobs(lanes)
+        self.knobs = batch_mod.shard_over_fleet(self.knobs, mesh)
+        self.state = batch_mod.init_batched_state(cfg, len(lanes), mesh)
+
+    @classmethod
+    def from_precompiled(cls, cfg: SimConfig, path: str,
+                         specs: Sequence[ScenarioSpec],
+                         batch_windows: int = 32, seed: Optional[int] = None,
+                         mesh: Optional[Mesh] = None,
+                         n_windows: Optional[int] = None) -> "ScenarioFleet":
+        """A fleet fed straight from a pre-compiled npz (zero parsing).
+
+        The npz must have been written by ``precompile_trace`` under a
+        shape-compatible config (same window geometry and slot-pool
+        reservation) — validated against the npz's embedded metadata.
+        ``n_windows`` truncates the replay to the stack's first windows.
+        """
+        from repro.core.precompile import replay_windows, validate_replay
+        validate_replay(path, cfg)
+        return cls(cfg,
+                   replay_windows(path, batch=batch_windows,
+                                  n_windows=n_windows),
+                   specs, batch_windows=batch_windows, seed=seed, mesh=mesh)
 
     @property
     def n_scenarios(self) -> int:
         return len(self.specs)
 
     @property
+    def n_lanes(self) -> int:
+        """Device-side lane count: n_scenarios plus any mesh padding."""
+        return len(self._lane_specs)
+
+    @property
     def names(self) -> List[str]:
         return [s.name for s in self.specs]
 
     def _advance(self, batch: EventWindow, seed: int):
-        self.state, stats = batch_mod.run_scenarios_jit(
-            self.state, batch, self.knobs, self.cfg, self.scheduler_names,
-            seed)
+        if self.mesh is not None:
+            self.state, stats = batch_mod.run_scenarios_sharded_jit(
+                self.state, batch, self.knobs, self.cfg,
+                self.scheduler_names, self.mesh, seed)
+        else:
+            self.state, stats = batch_mod.run_scenarios_jit(
+                self.state, batch, self.knobs, self.cfg,
+                self.scheduler_names, seed)
+        if self.n_lanes != self.n_scenarios:
+            stats = jax.tree.map(lambda x: x[:, :self.n_scenarios], stats)
         return stats
 
     def report(self, baseline: int = 0) -> dict:
@@ -63,8 +127,10 @@ class ScenarioFleet(WindowedDriver):
     # --- pause/snapshot/resume (paper §IV, batched) ---
 
     def save(self, path: str):
-        """Snapshot the whole fleet: (B, ...) state + scenario metadata."""
-        save_snapshot(path, self.state, self.cfg, self.windows_done,
+        """Snapshot the fleet: real (B, ...) lanes + scenario metadata (mesh
+        padding lanes are sliced off, so snapshots are mesh-portable)."""
+        state = jax.tree.map(lambda x: x[:self.n_scenarios], self.state)
+        save_snapshot(path, state, self.cfg, self.windows_done,
                       extra={"scenario_names": self.names,
                              "schedulers": [s.scheduler for s in self.specs]})
 
@@ -78,5 +144,10 @@ class ScenarioFleet(WindowedDriver):
                 f"{self.n_scenarios}")
         if cfg != self.cfg:
             raise ValueError("snapshot config differs from fleet config")
-        self.state = state
+        if self.n_lanes != self.n_scenarios:
+            pad = batch_mod.init_batched_state(
+                self.cfg, self.n_lanes - self.n_scenarios)
+            state = jax.tree.map(
+                lambda s, p: jnp.concatenate([s, p], 0), state, pad)
+        self.state = batch_mod.shard_over_fleet(state, self.mesh)
         self.windows_done = windows_done

@@ -28,8 +28,10 @@ class ScenarioSpec:
                         up (their ADD/UPDATE_NODE events are masked dead)
     capacity_scale      multiply every node's declared capacity
     arrival_rate        < 1: thin ADD_TASK arrivals to this fraction;
-                        > 1: amplify load by suppressing a 1 - 1/rate
-                        fraction of task removals (tasks overstay)
+                        > 1: inject round((rate-1) x arrivals) synthesised
+                        SUBMITs per window into the reserved slot pool
+                        (requires SimConfig.inject_slots > 0 — the fleet
+                        refuses amplification without a pool)
     priority_surge_frac fraction of arriving tasks boosted to surge_priority
     surge_priority      the priority surged tasks get (GCD: 0..11)
     usage_scale         inflate reported task usage samples

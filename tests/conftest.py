@@ -15,6 +15,7 @@ _MULTIDEVICE_SUBPROCESS_TESTS = {
     "test_shard_map_moe_matches_gspmd_multidevice",
     "test_padded_ep_with_shared_experts_matches_gspmd",
     "test_mini_dryrun_multipod_mesh",
+    "test_sharded_fleet_eight_fake_devices_b64",
 }
 
 

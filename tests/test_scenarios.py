@@ -104,21 +104,74 @@ def test_thinning_also_drops_followup_events_of_thinned_tasks():
     assert (np.asarray(out.kind)[live] == EventKind.PAD).all()
 
 
-def test_amplification_suppresses_removals_only():
+def test_amplification_without_slot_pool_is_inert():
+    """With inject_slots=0 there is nowhere to synthesise SUBMITs: rate > 1
+    must leave the stream untouched (no removal-suppression proxy)."""
     evs = ([HostEvent(i, EventKind.REMOVE_TASK, i, a=(0.0, 0.0, 0.0))
             for i in range(64)]
            + [HostEvent(100 + i, EventKind.ADD_TASK, 128 + i,
                         a=(0.1, 0.1, 0.0)) for i in range(64)])
     w = _window(evs)
-    k, _ = _knobs(arrival_rate=2.0)           # suppress 1 - 1/2 of removals
+    k, _ = _knobs(arrival_rate=2.0)
     out = perturb.perturb_window(w, k, CFG)
-    is_rem = np.asarray(w.kind) == EventKind.REMOVE_TASK
-    is_add = np.asarray(w.kind) == EventKind.ADD_TASK
-    dropped = np.asarray(out.kind) == EventKind.PAD
-    assert (~dropped[is_add]).all()           # arrivals untouched
-    expect = np.asarray(
-        perturb.hash01(w.slot, perturb._SALT_SUPPRESS, CFG)) < 0.5
-    assert (dropped[is_rem] == expect[is_rem]).all()
+    for f in out._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                      np.asarray(getattr(w, f)), err_msg=f)
+
+
+INJECT_CFG = dataclasses.replace(CFG, inject_slots=16, inject_task_slots=64)
+
+
+def _inject_window(events):
+    return jax.tree.map(jnp.asarray, pack_window(INJECT_CFG, events, 0))
+
+
+def test_amplification_injects_cloned_submits_into_reserved_rows():
+    cfg = INJECT_CFG
+    n = 24
+    w = _inject_window(_task_add_events(n))
+    k, _ = _knobs(arrival_rate=2.0)
+    out = perturb.perturb_window(w, k, cfg, window=jnp.int32(3))
+    S = cfg.inject_slots
+    # original rows bit-identical
+    for f in out._fields:
+        a, b = np.asarray(getattr(out, f)), np.asarray(getattr(w, f))
+        if np.ndim(a):
+            np.testing.assert_array_equal(a[:-S], b[:-S], err_msg=f)
+    kind_tail = np.asarray(out.kind)[-S:]
+    inj = kind_tail == EventKind.ADD_TASK
+    assert inj.sum() == min(S, n)              # round((2-1)*n) capped at S
+    assert (kind_tail[~inj] == EventKind.PAD).all()
+    # fresh ids from the reserved pool, distinct within the window
+    slots = np.asarray(out.slot)[-S:][inj]
+    assert (slots >= cfg.real_task_slots).all()
+    assert (slots < cfg.max_tasks).all()
+    assert len(set(slots.tolist())) == inj.sum()
+    # payloads cloned from real arrivals
+    reqs = {tuple(r) for r in np.asarray(w.a)[:n].tolist()}
+    for row in np.asarray(out.a)[-S:][inj].tolist():
+        assert tuple(row) in reqs
+
+
+def test_injection_count_scales_with_rate_and_is_capped():
+    cfg = INJECT_CFG
+    w = _inject_window(_task_add_events(8))
+    for rate, expect in ((1.0, 0), (1.5, 4), (2.0, 8), (4.0, 16), (10.0, 16)):
+        k, _ = _knobs(arrival_rate=rate)
+        out = perturb.perturb_window(w, k, cfg, window=jnp.int32(0))
+        got = int((np.asarray(out.kind)[-cfg.inject_slots:]
+                   == EventKind.ADD_TASK).sum())
+        assert got == expect, (rate, got, expect)
+
+
+def test_injection_identity_at_rate_one_is_bitwise():
+    cfg = INJECT_CFG
+    w = _inject_window(_task_add_events(24) + _node_add_events(8))
+    k, _ = _knobs()
+    out = perturb.perturb_window(w, k, cfg, window=jnp.int32(11))
+    for f in out._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                      np.asarray(getattr(w, f)), err_msg=f)
 
 
 def test_capacity_scale_scales_node_payloads_only():
@@ -275,6 +328,141 @@ def test_fleet_report_and_table():
         assert len(rep["curves"]["n_pending"][0]) == fleet.windows_done
         table = format_table(rep)
         assert "greedy" in table and "cap=0.5" in table
+
+
+def test_amplification_schedules_strictly_more_tasks():
+    """arrival_amp=2.0 must place strictly MORE tasks than baseline — the
+    acceptance bar that injection adds real load instead of the old
+    removal-suppression proxy."""
+    cfg = INJECT_CFG
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=32, n_jobs=40, horizon_windows=25,
+                       seed=11, usage_period_us=10_000_000)
+        specs = [ScenarioSpec(name="base"),
+                 ScenarioSpec(name="amp", arrival_rate=2.0)]
+        fleet = ScenarioFleet(cfg, GCDParser(cfg, d).packed_windows(
+            30, start_us=SHIFT_US - cfg.window_us), specs, batch_windows=15)
+        fleet.run()
+        frame = fleet.stats_frame()
+        placed = np.asarray(frame["placements"])[-1]
+        injected = np.asarray(frame["injected_arrivals"]).sum(0)
+        assert injected[0] == 0 and injected[1] > 0
+        assert placed[1] > placed[0], (placed, injected)
+        rep = fleet.report()
+        assert rep["scenarios"][1]["injected"] == injected[1]
+        assert rep["scenarios"][1]["d_placements"] > 0
+        # amplified lane still satisfies every engine invariant
+        lane = jax.tree.map(lambda x: x[1], fleet.state)
+        assert validate_invariants(lane, cfg) == {}
+
+
+def test_identity_lane_with_slot_pool_matches_run_windows():
+    """inject_slots > 0 reshapes every packed window (reserved PAD tail) —
+    lane 0 with amplification 1.0 must STILL be bit-identical to the
+    single-trajectory engine on the same slot-pool-padded windows."""
+    cfg = INJECT_CFG
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=24, n_jobs=30, horizon_windows=20,
+                       seed=13, usage_period_us=10_000_000)
+        start = SHIFT_US - cfg.window_us
+        sim = Simulation(cfg, GCDParser(cfg, d).packed_windows(
+            25, start_us=start), scheduler="greedy", batch_windows=25)
+        sim.run()
+        specs = [ScenarioSpec(name="base"),
+                 ScenarioSpec(name="amp", arrival_rate=1.5)]
+        fleet = ScenarioFleet(cfg, GCDParser(cfg, d).packed_windows(
+            25, start_us=start), specs, batch_windows=25)
+        fleet.run()
+        for f in sim.state._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sim.state, f)),
+                np.asarray(getattr(fleet.state, f))[0], err_msg=f)
+        sf, ff_ = sim.stats_frame(), fleet.stats_frame()
+        for key in sf:
+            np.testing.assert_array_equal(
+                np.asarray(sf[key]), np.asarray(ff_[key])[:, 0], err_msg=key)
+
+
+def test_fleet_rejects_amplification_without_slot_pool():
+    with pytest.raises(ValueError, match="inject_slots"):
+        ScenarioFleet(CFG, iter(()),
+                      [ScenarioSpec(name="amp", arrival_rate=2.0)])
+
+
+def test_replay_roundtrip_matches_parse_at_runtime():
+    """precompile_trace -> replay_windows -> ScenarioFleet must reproduce
+    the parse-at-runtime fleet exactly, injected arrivals included."""
+    from repro.core.precompile import precompile_trace, validate_replay
+    cfg = INJECT_CFG
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=32, n_jobs=40, horizon_windows=25,
+                       seed=17, usage_period_us=10_000_000)
+        start = SHIFT_US - cfg.window_us
+        specs = [ScenarioSpec(name="base"),
+                 ScenarioSpec(name="amp", arrival_rate=2.0),
+                 ScenarioSpec(name="ff", scheduler="first_fit")]
+
+        live = ScenarioFleet(cfg, GCDParser(cfg, d).packed_windows(
+            30, start_us=start), specs, batch_windows=10)
+        live.run()
+
+        npz = d + "/stack.npz"
+        n = precompile_trace(cfg, d, npz, 30, start_us=start)
+        assert n == 30
+        validate_replay(npz, cfg)
+        replay = ScenarioFleet.from_precompiled(cfg, npz, specs,
+                                                batch_windows=10)
+        replay.run()
+
+        assert replay.windows_done == live.windows_done
+        for f in live.state._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(live.state, f)),
+                np.asarray(getattr(replay.state, f)), err_msg=f)
+        lf, rf = live.stats_frame(), replay.stats_frame()
+        for key in lf:
+            np.testing.assert_array_equal(np.asarray(lf[key]),
+                                          np.asarray(rf[key]), err_msg=key)
+        assert np.asarray(rf["injected_arrivals"]).sum() > 0
+        assert live.report() == replay.report()
+
+        # a shape-incompatible consumer is refused up front
+        bad = dataclasses.replace(cfg, inject_slots=8)
+        with pytest.raises(ValueError, match="inject_slots"):
+            ScenarioFleet.from_precompiled(bad, npz, specs)
+
+
+def test_prefetcher_passes_prestacked_batches_through():
+    from repro.core.pipeline import WindowPrefetcher
+    from repro.core.events import stack_windows as stack
+    singles = [pack_window(CFG, _task_add_events(4, t=i), i)
+               for i in range(6)]
+    stacked = stack(singles)
+    got = list(WindowPrefetcher(CFG, iter([stacked]), batch_windows=2))
+    assert len(got) == 1 and got[0].kind.shape[0] == 6
+    np.testing.assert_array_equal(got[0].kind, stacked.kind)
+
+
+def test_init_batched_state_no_eager_tile(monkeypatch):
+    """Regression: the (B, ...) stacked state must come from broadcast_to
+    (zero-copy view), never jnp.tile (B eager full copies)."""
+    def _no_tile(*a, **k):
+        raise AssertionError("init_batched_state must not materialise B "
+                             "copies via jnp.tile")
+    monkeypatch.setattr(jnp, "tile", _no_tile)
+    state = batch_mod.init_batched_state(CFG, 64)
+    lead = jax.tree.leaves(state)[0]
+    assert lead.shape[0] == 64
+    single = init_state(CFG)
+    for f in state._fields:
+        lane = np.asarray(getattr(state, f))[7]
+        np.testing.assert_array_equal(lane, np.asarray(getattr(single, f)),
+                                      err_msg=f)
+    # under a mesh the lanes land sharded over the fleet axis directly
+    mesh = batch_mod.fleet_mesh(1)
+    sharded = batch_mod.init_batched_state(CFG, 8, mesh)
+    sh = sharded.node_total.sharding
+    assert sh.spec[0] == batch_mod.FLEET_AXIS
 
 
 def test_fleet_snapshot_roundtrip():
