@@ -6,7 +6,11 @@ Faithful to CloudSim's architecture (the properties the paper calls out):
 * single-threaded central event loop over a future-event queue,
 * one VM per host, task ('cloudlet') objects placed by a simple broker,
 * requested-resources-only accounting (no usage traces, no constraints,
-  no node churn — Table II rows where CloudSim says 'No'/'Limited').
+  no node churn — Table II rows where CloudSim says 'No'/'Limited'),
+* a pluggable placement policy (CloudSim's ``VmAllocationPolicy``) — the
+  extensibility baseline that ``repro.sched``'s registry is benchmarked
+  against: here a policy is an O(N)-per-task host scan picked by name from
+  ``PLACEMENT_POLICIES``; there a registered proposal batched over (P, N).
 
 The Fig. 7 benchmark drives this and the AGOCS-JAX engine with the same
 (task, node) counts at the paper's ~11:1 task:node ratio and compares
@@ -51,12 +55,51 @@ class Cloudlet:
     finished: bool = False
 
 
+def _leftover(h: Host, c: "Cloudlet") -> float:
+    """Free cpu+mem the host would have left after placing the cloudlet."""
+    return (h.cpu - h.used_cpu - c.cpu) + (h.mem - h.used_mem - c.mem)
+
+
+def _first_fit(hosts: List[Host], c: "Cloudlet") -> Optional[Host]:
+    """First fitting host in id order (CloudSim's 'simple' default)."""
+    for h in hosts:                           # first-fit scan (O(N) / task)
+        if h.fits(c.cpu, c.mem):
+            return h
+    return None
+
+
+def _best_fit(hosts: List[Host], c: "Cloudlet") -> Optional[Host]:
+    """Tightest fitting host (least leftover after placement)."""
+    fitting = [h for h in hosts if h.fits(c.cpu, c.mem)]
+    return min(fitting, key=lambda h: _leftover(h, c), default=None)
+
+
+def _worst_fit(hosts: List[Host], c: "Cloudlet") -> Optional[Host]:
+    """Emptiest fitting host (spread / load-balancing allocation)."""
+    fitting = [h for h in hosts if h.fits(c.cpu, c.mem)]
+    return max(fitting, key=lambda h: _leftover(h, c), default=None)
+
+
+# the object-oriented mirror of repro.sched's registry: CloudSim extends by
+# subclassing VmAllocationPolicy, we pick a scan by name
+PLACEMENT_POLICIES = {
+    "first_fit": _first_fit,
+    "best_fit": _best_fit,
+    "worst_fit": _worst_fit,
+}
+
+
 class CloudSimLike:
-    """Single-threaded DES: SUBMIT -> place (first-fit) -> FINISH -> release."""
+    """Single-threaded DES: SUBMIT -> place (policy) -> FINISH -> release."""
 
     SUBMIT, FINISH = 0, 1
 
-    def __init__(self, n_hosts: int, seed: int = 0):
+    def __init__(self, n_hosts: int, seed: int = 0,
+                 policy: str = "first_fit"):
+        if policy not in PLACEMENT_POLICIES:
+            raise KeyError(f"unknown placement policy {policy!r}; "
+                           f"have {list(PLACEMENT_POLICIES)}")
+        self._policy = PLACEMENT_POLICIES[policy]
         rng = np.random.default_rng(seed)
         caps = np.array([[0.5, 0.5], [1.0, 1.0], [1.0, 0.5]])
         pick = caps[rng.integers(0, len(caps), n_hosts)]
@@ -78,17 +121,17 @@ class CloudSimLike:
         return self._seq
 
     def _place(self, c: Cloudlet) -> bool:
-        for h in self.hosts:                      # first-fit scan (O(N) / task)
-            if h.fits(c.cpu, c.mem):
-                h.used_cpu += c.cpu
-                h.used_mem += c.mem
-                h.tasks.add(c.tid)
-                c.host = h.hid
-                self.placed += 1
-                heapq.heappush(self.queue, (self.clock + c.duration,
-                                            self.FINISH, self._next(), c.tid))
-                return True
-        return False
+        h = self._policy(self.hosts, c)
+        if h is None:
+            return False
+        h.used_cpu += c.cpu
+        h.used_mem += c.mem
+        h.tasks.add(c.tid)
+        c.host = h.hid
+        self.placed += 1
+        heapq.heappush(self.queue, (self.clock + c.duration,
+                                    self.FINISH, self._next(), c.tid))
+        return True
 
     def run(self) -> Dict[str, float]:
         t0 = time.perf_counter()
@@ -133,8 +176,9 @@ def synth_workload(n_tasks: int, horizon: float = 3600.0, seed: int = 0
     return out
 
 
-def run_benchmark(n_hosts: int, n_tasks: int, seed: int = 0) -> Dict[str, float]:
-    sim = CloudSimLike(n_hosts, seed)
+def run_benchmark(n_hosts: int, n_tasks: int, seed: int = 0,
+                  policy: str = "first_fit") -> Dict[str, float]:
+    sim = CloudSimLike(n_hosts, seed, policy=policy)
     for c in synth_workload(n_tasks, seed=seed):
         sim.submit(c)
     return sim.run()

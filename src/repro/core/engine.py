@@ -20,7 +20,7 @@ field-group) per window):
   4. usage samples,
   5. node-removal evictions (running tasks on dead nodes -> back to pending),
   6. accounting recompute (segment sums),
-  7. scheduling,
+  7. scheduling (any ``repro.sched`` registry scheduler),
   8. stats.
 """
 from __future__ import annotations
@@ -190,6 +190,6 @@ def run_windows(state: SimState, windows: EventWindow, cfg: SimConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "scheduler_name"))
 def run_windows_jit(state: SimState, windows: EventWindow, cfg: SimConfig,
                     scheduler_name: str, seed: int = 0):
-    from repro.core.schedulers import get_scheduler
+    from repro.sched import get_scheduler
     return run_windows(state, windows, cfg, get_scheduler(scheduler_name),
                        seed)

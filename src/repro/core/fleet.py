@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import SimConfig
 from repro.core import engine as engine_mod
 from repro.core.events import EventWindow
-from repro.core.schedulers import get_scheduler
+from repro.sched import get_scheduler
 from repro.core.state import SimState, init_state
 
 

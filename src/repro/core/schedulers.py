@@ -1,341 +1,48 @@
-"""Pluggable schedulers — the paper's §IV use case (MASB): AGOCS feeds the
-same workload to several schedulers under test. Implemented: greedy best-fit,
-first-fit, random, round-robin, simulated annealing and a genetic algorithm
-(the meta-heuristic suite of [22]).
+"""DEPRECATED shim — the scheduler suite moved to :mod:`repro.sched`.
 
-All schedulers share one *finalisation* pass: an in-priority-order
-``fori_loop`` that re-checks capacity as reservations accumulate, so **no
-scheduler can overcommit a node** regardless of what it proposes — the
-invariant the tests verify. Proposals differ only in the preference matrix
-they hand to the finaliser.
+This module re-exports the public surface (and the legacy underscore names)
+for one release so existing imports keep working:
 
-Every scheduler is pure-JAX with signature ``(state, cfg, rng) -> state`` and
-is vmap-able: hundreds of scheduler replicas can consume one workload in
-parallel on the 'data' mesh axis (the paper runs 5 concurrently on a laptop).
+  * ``SCHEDULERS`` / ``PROPOSERS`` / ``DYNAMIC_BESTFIT`` are the *same dict
+    objects* as ``repro.sched``'s registry-derived views, so schedulers
+    registered through ``repro.sched.register_scheduler`` are visible here
+    too;
+  * ``_base`` / ``_finalize`` / ``_pending_batch`` and the ``_propose_*``
+    functions alias their renamed homes (``sched.base.base_pass``,
+    ``sched.commit.finalize``, ...).
+
+New code should import from :mod:`repro.sched`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Tuple
+from repro.sched import (DYNAMIC_BESTFIT, NEG, PROPOSERS, SCHEDULERS,
+                         SchedulerEntry, base_pass, describe_schedulers,
+                         finalize, first_fit, genetic, get_entry,
+                         get_scheduler, greedy, list_schedulers,
+                         pending_batch, random_fit, register_scheduler,
+                         round_robin, simulated_annealing, tabu_search)
+from repro.sched.heuristics import (propose_first_fit, propose_greedy,
+                                    propose_random, propose_round_robin)
+from repro.sched.metaheuristics import (balance_objective, propose_genetic,
+                                        propose_simulated_annealing,
+                                        propose_tabu_search)
 
-import jax
-import jax.numpy as jnp
+# legacy underscore aliases (pre-refactor internal names)
+_pending_batch = pending_batch
+_base = base_pass
+_finalize = finalize
+_balance_objective = balance_objective
+_propose_greedy = propose_greedy
+_propose_first_fit = propose_first_fit
+_propose_round_robin = propose_round_robin
+_propose_random = propose_random
+_propose_simulated_annealing = propose_simulated_annealing
+_propose_tabu_search = propose_tabu_search
+_propose_genetic = propose_genetic
 
-from repro.config import SimConfig
-from repro.core.state import SimState, TASK_PENDING, TASK_RUNNING
-from repro.kernels.constraint_match.ops import constraint_match
-
-NEG = -jnp.inf
-
-
-def _pending_batch(state: SimState, cfg: SimConfig):
-    """Top-P pending task slots by priority (descending)."""
-    P = cfg.sched_batch
-    pend = state.task_state == TASK_PENDING
-    key = jnp.where(pend, state.task_prio, jnp.iinfo(jnp.int32).min)
-    _, idx = jax.lax.top_k(key, P)
-    valid = pend[idx]
-    return idx, valid
-
-
-def _base(state: SimState, cfg: SimConfig):
-    idx, valid = _pending_batch(state, cfg)
-    scores = constraint_match(
-        state.task_req[idx], state.task_constraints[idx],
-        state.node_total, state.node_reserved, state.node_attrs,
-        state.node_active, use_kernel=cfg.use_kernels)         # (P, N)
-    base_ok = jnp.isfinite(scores)
-    return idx, valid, base_ok, scores
-
-
-def _finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
-              dynamic_bestfit=False) -> SimState:
-    """Sequential capacity-checked assignment in priority order.
-
-    pref: (P, N) preference scores (higher better; NEG = never).
-    dynamic_bestfit: recompute best-fit scores against the *running*
-    reservation tally (true best-fit-decreasing) instead of static pref.
-    May be a traced bool scalar (the scenario fleet dispatches schedulers
-    per-lane at runtime); the static True/False fast paths stay unchanged.
-    """
-    N = cfg.max_nodes
-    total = jnp.where(state.node_active[:, None], state.node_total, -1.0)
-    denom = jnp.maximum(state.node_total, 1e-6)
-    req = state.task_req[idx]                                   # (P, R)
-    is_traced = isinstance(dynamic_bestfit, jax.Array)
-
-    def body(i, carry):
-        reserved, node_of = carry
-        free = total - reserved                                 # (N, R)
-        fit = (req[i][None, :] <= free + 1e-9).all(-1) & base_ok[i]
-        if is_traced or dynamic_bestfit:
-            sc_dyn = -((free - req[i][None, :]) / denom).sum(-1)
-        if is_traced:
-            sc = jnp.where(dynamic_bestfit, sc_dyn, pref[i])
-            sc = jnp.where(fit, sc, NEG)
-        elif dynamic_bestfit:
-            sc = jnp.where(fit, sc_dyn, NEG)
-        else:
-            sc = jnp.where(fit, pref[i], NEG)
-        n = jnp.argmax(sc).astype(jnp.int32)
-        can = fit[n] & valid[i]
-        add = jnp.where(can, req[i], 0.0)
-        reserved = reserved.at[n].add(add)
-        node_of = node_of.at[i].set(jnp.where(can, n, -1))
-        return reserved, node_of
-
-    node_of0 = jnp.full((cfg.sched_batch,), -1, jnp.int32)
-    _, node_of = jax.lax.fori_loop(0, cfg.sched_batch, body,
-                                   (state.node_reserved, node_of0))
-
-    placed = node_of >= 0
-    task_state = state.task_state.at[idx].set(
-        jnp.where(placed, TASK_RUNNING, state.task_state[idx]).astype(jnp.int8))
-    task_node = state.task_node.at[idx].set(
-        jnp.where(placed, node_of, state.task_node[idx]))
-    return state._replace(
-        task_state=task_state, task_node=task_node,
-        placements=state.placements + placed.sum().astype(jnp.int32))
-
-
-# --- concrete schedulers -----------------------------------------------------
-#
-# Every scheduler is a *proposal* function with the uniform signature
-#   propose(state, cfg, rng, idx, valid, base_ok, scores) -> pref (P, N)
-# plus a shared `_finalize` pass. The public `(state, cfg, rng) -> state`
-# entry points below just glue `_base` + propose + `_finalize` together; the
-# scenario fleet (repro/scenarios/batch.py) instead computes `_base` once and
-# lax.switches over the proposal functions only, so per-lane scheduler
-# dispatch does not duplicate the expensive shared passes.
-
-def _propose_greedy(state, cfg, rng, idx, valid, base_ok, scores):
-    """Best-fit decreasing: pref is unused (dynamic re-scoring in _finalize),
-    returned scores only pin the shape/dtype."""
-    return scores
-
-
-def _propose_first_fit(state, cfg, rng, idx, valid, base_ok, scores):
-    return -jnp.broadcast_to(
-        jnp.arange(cfg.max_nodes, dtype=jnp.float32)[None, :], base_ok.shape)
-
-
-def _propose_round_robin(state, cfg, rng, idx, valid, base_ok, scores):
-    start = (state.window * 131) % cfg.max_nodes
-    order = (jnp.arange(cfg.max_nodes) - start) % cfg.max_nodes
-    return -jnp.broadcast_to(order.astype(jnp.float32)[None, :],
-                             base_ok.shape)
-
-
-def _propose_random(state, cfg, rng, idx, valid, base_ok, scores):
-    return jax.random.uniform(rng, base_ok.shape)
-
-
-def greedy(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    """Best-fit decreasing: tightest feasible node, re-scored dynamically."""
-    idx, valid, base_ok, scores = _base(state, cfg)
-    return _finalize(state, cfg, idx, valid, base_ok, scores,
-                     dynamic_bestfit=True)
-
-
-def first_fit(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, scores = _base(state, cfg)
-    pref = _propose_first_fit(state, cfg, rng, idx, valid, base_ok, scores)
-    return _finalize(state, cfg, idx, valid, base_ok, pref)
-
-
-def round_robin(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, scores = _base(state, cfg)
-    pref = _propose_round_robin(state, cfg, rng, idx, valid, base_ok, scores)
-    return _finalize(state, cfg, idx, valid, base_ok, pref)
-
-
-def random_fit(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, scores = _base(state, cfg)
-    pref = _propose_random(state, cfg, rng, idx, valid, base_ok, scores)
-    return _finalize(state, cfg, idx, valid, base_ok, pref)
-
-
-def _balance_objective(reserved, total, active):
-    """Variance of per-node reservation fraction (lower = better balanced)."""
-    frac = jnp.where(active[:, None], reserved / jnp.maximum(total, 1e-9), 0.0)
-    f = frac.mean(-1)
-    na = jnp.maximum(active.sum(), 1)
-    mu = f.sum() / na
-    return jnp.where(active, (f - mu) ** 2, 0.0).sum() / na
-
-
-def _propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
-                                 scores, n_steps: int = 64, t0: float = 0.1):
-    """Anneal a random feasible preference toward balanced placements.
-    Objective: post-placement reservation balance."""
-    P, N = base_ok.shape
-    k_init, k_steps = jax.random.split(rng)
-    pref = jax.random.uniform(k_init, (P, N))
-
-    total = jnp.maximum(state.node_total, 1e-9)
-
-    def trial_reserved(pref_m):
-        """Cheap surrogate placement: every task goes to its argmax node
-        (capacity ignored — the finaliser enforces it later)."""
-        choice = jnp.argmax(jnp.where(base_ok, pref_m, NEG), axis=1)
-        onehot = jax.nn.one_hot(choice, N, dtype=jnp.float32) * \
-            (valid & base_ok.any(1))[:, None]
-        return state.node_reserved + onehot.T @ state.task_req[idx]
-
-    def energy(pref_m):
-        return _balance_objective(trial_reserved(pref_m), state.node_total,
-                                  state.node_active)
-
-    def body(i, carry):
-        pref_m, e, key = carry
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        p = jax.random.randint(k1, (), 0, P)
-        n = jax.random.randint(k2, (), 0, N)
-        cand = pref_m.at[p, n].add(1.0)       # push task p toward node n
-        e_new = energy(cand)
-        temp = t0 * (1.0 - i / n_steps) + 1e-6
-        accept = (e_new < e) | (jax.random.uniform(k3) <
-                                jnp.exp(-(e_new - e) / temp))
-        pref_m = jnp.where(accept, cand, pref_m)
-        e = jnp.where(accept, e_new, e)
-        return pref_m, e, key
-
-    pref, _, _ = jax.lax.fori_loop(0, n_steps, body,
-                                   (pref, energy(pref), k_steps))
-    return pref
-
-
-def simulated_annealing(state: SimState, cfg: SimConfig, rng: jax.Array
-                        ) -> SimState:
-    idx, valid, base_ok, scores = _base(state, cfg)
-    pref = _propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
-                                        scores)
-    return _finalize(state, cfg, idx, valid, base_ok, pref)
-
-
-def _propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores,
-                         n_steps: int = 48, tenure: int = 8):
-    """Tabu search (paper §IV names it among the MASB schedulers): greedy
-    local moves on the preference surrogate with a short-term memory that
-    forbids revisiting recently-touched (task) coordinates."""
-    P, N = base_ok.shape
-    k_init, k_steps = jax.random.split(rng)
-    pref = jnp.where(jnp.isfinite(scores), scores, 0.0) + \
-        0.01 * jax.random.uniform(k_init, (P, N))
-
-    def trial_reserved(pref_m):
-        choice = jnp.argmax(jnp.where(base_ok, pref_m, NEG), axis=1)
-        onehot = jax.nn.one_hot(choice, N, dtype=jnp.float32) * \
-            (valid & base_ok.any(1))[:, None]
-        return state.node_reserved + onehot.T @ state.task_req[idx]
-
-    def energy(pref_m):
-        return _balance_objective(trial_reserved(pref_m), state.node_total,
-                                  state.node_active)
-
-    def body(i, carry):
-        pref_m, e_best, best, tabu_until, key = carry
-        key, k1, k2 = jax.random.split(key, 3)
-        p = jax.random.randint(k1, (), 0, P)
-        n = jax.random.randint(k2, (), 0, N)
-        allowed = tabu_until[p] <= i
-        cand = pref_m.at[p, n].add(jnp.where(allowed, 1.0, 0.0))
-        e_new = energy(cand)
-        improve = (e_new < e_best) & allowed
-        # aspiration: accept any improving move; otherwise keep best-so-far
-        pref_m = jnp.where(improve, cand, pref_m)
-        best = jnp.where(improve, cand, best)
-        e_best = jnp.where(improve, e_new, e_best)
-        tabu_until = tabu_until.at[p].set(
-            jnp.where(allowed, i + tenure, tabu_until[p]))
-        return pref_m, e_best, best, tabu_until, key
-
-    e0 = energy(pref)
-    _, _, best, _, _ = jax.lax.fori_loop(
-        0, n_steps, body, (pref, e0, pref, jnp.zeros((P,), jnp.int32),
-                           k_steps))
-    return best
-
-
-def tabu_search(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, scores = _base(state, cfg)
-    pref = _propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores)
-    return _finalize(state, cfg, idx, valid, base_ok, pref)
-
-
-def _propose_genetic(state, cfg, rng, idx, valid, base_ok, scores,
-                     pop: int = 8, gens: int = 4, mut_rate: float = 0.15):
-    """Small GA over preference matrices (the paper's 4 GA variants, seeded
-    and unseeded, distilled): tournament-free truncation selection + mutation;
-    fitness = placement balance of the argmax surrogate."""
-    P, N = base_ok.shape
-    keys = jax.random.split(rng, pop + 1)
-    population = jax.vmap(lambda k: jax.random.uniform(k, (P, N)))(keys[:pop])
-    # seed one individual with the best-fit scores (the paper's 'seeded GA')
-    population = population.at[0].set(
-        jnp.where(jnp.isfinite(scores), scores, 0.0))
-
-    def trial_reserved(pref_m):
-        choice = jnp.argmax(jnp.where(base_ok, pref_m, NEG), axis=1)
-        onehot = jax.nn.one_hot(choice, N, dtype=jnp.float32) * \
-            (valid & base_ok.any(1))[:, None]
-        return state.node_reserved + onehot.T @ state.task_req[idx]
-
-    def fitness(pref_m):
-        return -_balance_objective(trial_reserved(pref_m), state.node_total,
-                                   state.node_active)
-
-    def gen_step(carry, key):
-        population = carry
-        fit = jax.vmap(fitness)(population)
-        order = jnp.argsort(-fit)
-        elite = population[order[: pop // 2]]
-        k1, k2 = jax.random.split(key)
-        parents = jnp.concatenate([elite, elite], axis=0)
-        mask = jax.random.uniform(k1, parents.shape) < mut_rate
-        noise = jax.random.uniform(k2, parents.shape)
-        children = jnp.where(mask, noise, parents)
-        children = children.at[0].set(elite[0])   # elitism
-        return children, None
-
-    population, _ = jax.lax.scan(gen_step, population,
-                                 jax.random.split(keys[pop], gens))
-    fit = jax.vmap(fitness)(population)
-    return population[jnp.argmax(fit)]
-
-
-def genetic(state: SimState, cfg: SimConfig, rng: jax.Array) -> SimState:
-    idx, valid, base_ok, scores = _base(state, cfg)
-    pref = _propose_genetic(state, cfg, rng, idx, valid, base_ok, scores)
-    return _finalize(state, cfg, idx, valid, base_ok, pref)
-
-
-SCHEDULERS: Dict[str, Callable] = {
-    "greedy": greedy,
-    "first_fit": first_fit,
-    "round_robin": round_robin,
-    "random": random_fit,
-    "simulated_annealing": simulated_annealing,
-    "tabu_search": tabu_search,
-    "genetic": genetic,
-}
-
-# proposal-only entry points (pref out, no finalise) + whether _finalize
-# should re-score dynamically — consumed by the scenario fleet's dispatcher
-PROPOSERS: Dict[str, Callable] = {
-    "greedy": _propose_greedy,
-    "first_fit": _propose_first_fit,
-    "round_robin": _propose_round_robin,
-    "random": _propose_random,
-    "simulated_annealing": _propose_simulated_annealing,
-    "tabu_search": _propose_tabu_search,
-    "genetic": _propose_genetic,
-}
-DYNAMIC_BESTFIT: Dict[str, bool] = {n: n == "greedy" for n in SCHEDULERS}
-
-
-def get_scheduler(name: str) -> Callable:
-    try:
-        return SCHEDULERS[name]
-    except KeyError:
-        raise KeyError(f"unknown scheduler {name!r}; have {list(SCHEDULERS)}")
+__all__ = [
+    "SCHEDULERS", "PROPOSERS", "DYNAMIC_BESTFIT", "NEG", "SchedulerEntry",
+    "register_scheduler", "get_scheduler", "get_entry", "list_schedulers",
+    "describe_schedulers", "greedy", "first_fit", "round_robin",
+    "random_fit", "simulated_annealing", "tabu_search", "genetic",
+]

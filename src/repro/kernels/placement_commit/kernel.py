@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: sequential placement commit with an on-chip tally.
+
+The scheduler finaliser is the one inherently sequential pass in the engine:
+tasks are walked in priority order and each assignment changes the free
+capacity the next task sees. The XLA ``fori_loop`` formulation re-materialises
+the (N, R) free-capacity matrix (and, for best-fit, an (N, R) division) from
+HBM-resident operands on every task. Here the loop runs *inside* one kernel:
+
+* grid-steps over task tiles (priority order = row order is preserved — the
+  grid is sequential on TPU, which is exactly what a priority scan needs);
+* the running reservation tally is a revisited output block resident in
+  VMEM across the whole scan (the same accumulation pattern as
+  ``segment_usage``);
+* per-task work is vector arithmetic on VMEM-resident blocks: fit mask,
+  (optional) dynamic best-fit re-score, argmax, and a one-row tally update —
+  no HBM round-trips between tasks.
+
+The kernel is **natively batched**: every operand carries a leading lane
+axis ``B`` (the scenario fleet's vmap axis — see ``ops.placement_commit``'s
+``custom_vmap`` rule) and the per-task loop vectorises across lanes inside
+one kernel invocation. The single-trajectory engine is just ``B=1``. This
+matters: the generic Pallas vmap fallback would serialise lanes into extra
+grid steps, where the lane axis really wants to ride the vector units.
+
+The assignment semantics are bit-identical to ``ref.placement_commit_ref``
+(the seed finaliser) per lane: same fit epsilon, same score expressions,
+same first-index argmax tie-break, and the tally update writes
+``reserved[n] + add`` for the argmax row even when the task cannot place
+(add = 0), exactly like the reference's ``.at[n].add(add)``.
+
+``mode`` specialises the compiled body: 'static' never computes the dynamic
+re-score, 'dynamic' never reads the preference matrix, and 'both' selects at
+runtime from a per-lane flag — the scenario fleet dispatches schedulers
+per-lane with a *traced* dynamic_bestfit, so the flag must be data, not
+structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _kernel(pref_ref, req_ref, ok_ref, valid_ref, total_ref, denom_ref,
+            res0_ref, dyn_ref, node_ref, res_ref, *, mode: str,
+            n_lanes: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        res_ref[...] = jnp.broadcast_to(res0_ref[...], res_ref.shape)
+
+    # every operand carries a lane axis of size B — or 1 when the lane is
+    # shared (a vmap over a broadcast operand): the body's arithmetic
+    # broadcasts size-1 lanes for free, which keeps lane-invariant blocks
+    # (the usual case for req/ok/total in a fleet over one workload) from
+    # being copied B times
+    pref = pref_ref[...]                       # (B|1, TP, N) f32
+    req = req_ref[...]                         # (B|1, TP, R) f32
+    ok = ok_ref[...]                           # (B|1, TP, N) bool
+    valid = valid_ref[...]                     # (B|1, TP)    bool
+    total = total_ref[...]                     # (B|1, N, R)  f32, dead = -1
+    denom = denom_ref[...]                     # (B|1, N, R)  f32
+    dyn = dyn_ref[...][:, 0] != 0              # (B|1,) lane flags ('both')
+
+    B = n_lanes
+    _, TP, N = pref.shape
+    R = req.shape[2]
+    lanes = jax.lax.iota(jnp.int32, B)
+
+    def body(j, carry):
+        reserved, node_of = carry
+        req_j = jax.lax.dynamic_slice_in_dim(req, j, 1, 1)    # (B, 1, R)
+        free = total - reserved                               # (B, N, R)
+        fit = (req_j <= free + 1e-9).all(-1) \
+            & jax.lax.dynamic_slice_in_dim(ok, j, 1, 1)[:, 0]   # (B, N)
+        if mode != "static":
+            sc_dyn = -((free - req_j) / denom).sum(-1)        # (B, N)
+        if mode != "dynamic":
+            pref_j = jax.lax.dynamic_slice_in_dim(pref, j, 1, 1)[:, 0]
+        if mode == "both":
+            sc = jnp.where(dyn[:, None], sc_dyn, pref_j)
+            sc = jnp.where(fit, sc, NEG_INF)
+        elif mode == "dynamic":
+            sc = jnp.where(fit, sc_dyn, NEG_INF)
+        else:
+            sc = jnp.where(fit, pref_j, NEG_INF)
+        n = jnp.argmax(sc, axis=-1).astype(jnp.int32)         # (B,)
+        flat = lanes * N + n         # per-lane winner as flat (B*N) indices
+        fit_n = fit.reshape(B * N)[flat]
+        can = fit_n & jax.lax.dynamic_slice_in_dim(valid, j, 1, 1)[:, 0]
+        add = jnp.where(can[:, None], req_j[:, 0, :], 0.0)    # (B, R)
+        # exactly the reference's reserved.at[n].add(add), one row per lane
+        # (flat 1-D scatter: lowers tighter than a 2-D (lane, node) scatter)
+        reserved = reserved.reshape(B * N, R).at[flat].add(add) \
+                           .reshape(B, N, R)
+        node_of = jax.lax.dynamic_update_slice_in_dim(
+            node_of, jnp.where(can, n, -1)[:, None], j, 1)
+        return reserved, node_of
+
+    node_of0 = jnp.full((B, TP), -1, jnp.int32)
+    reserved, node_of = jax.lax.fori_loop(0, TP, body,
+                                          (res_ref[...], node_of0))
+    res_ref[...] = reserved
+    node_ref[...] = node_of
+
+
+def placement_commit_pallas(pref, req, ok, valid, total, denom, reserved0,
+                            dyn, *, n_lanes: int, mode: str = "both",
+                            tile_p: int = 128, interpret: bool = True):
+    """Batched commit over ``n_lanes`` scenario lanes (1 for the
+    single-trajectory engine). Each operand's leading lane axis is either
+    ``n_lanes`` or 1 (lane-shared — kept un-copied). Returns node_of
+    (n_lanes, P) i32."""
+    P, N = pref.shape[1], pref.shape[2]
+    R = req.shape[2]
+    assert P % tile_p == 0, (P, tile_p)
+    assert mode in ("static", "dynamic", "both"), mode
+
+    grid = (P // tile_p,)
+    kernel = functools.partial(_kernel, mode=mode, n_lanes=n_lanes)
+
+    def task_spec(x, last):
+        return pl.BlockSpec((x.shape[0], tile_p) + last, lambda i: (0, i)
+                            + (0,) * len(last))
+
+    def node_spec(x):
+        return pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim)
+
+    node_of, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            task_spec(pref, (N,)),
+            task_spec(req, (R,)),
+            task_spec(ok, (N,)),
+            task_spec(valid, ()),
+            node_spec(total),
+            node_spec(denom),
+            node_spec(reserved0),
+            node_spec(dyn),
+        ],
+        out_specs=(
+            pl.BlockSpec((n_lanes, tile_p), lambda i: (0, i)),
+            pl.BlockSpec((n_lanes, N, R), lambda i: (0, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_lanes, P), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, N, R), jnp.float32),
+        ),
+        interpret=interpret,
+    )(pref, req, ok, valid, total, denom, reserved0, dyn)
+    return node_of

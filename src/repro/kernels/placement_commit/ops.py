@@ -1,0 +1,111 @@
+"""jit-able wrapper for the placement-commit kernel: padding, dtype folding,
+static/dynamic/both mode selection, kernel/ref dispatch — and the
+``custom_vmap`` rule that makes the scenario fleet's lane axis ride ONE
+batched kernel invocation instead of Pallas's serialising vmap fallback."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
+
+from repro.kernels.placement_commit.kernel import placement_commit_pallas
+from repro.kernels.placement_commit.ref import placement_commit_ref
+
+
+def _pad_to(x: jax.Array, n: int, axis: int, fill=0):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_commit(mode: str, tile_p: Optional[int], tile_n: int,
+                 interpret: bool):
+    """Build the (cached) kernel entry for one static configuration.
+
+    The primal path runs the batched kernel at B=1; the ``custom_vmap`` rule
+    broadcasts any unbatched operand and runs the SAME kernel with the real
+    lane axis inside the block, so vmapped commits (the scenario fleet)
+    vectorise across lanes instead of being serialised into grid steps.
+    """
+
+    def call_batched(n_lanes, pref, req, ok, valid, total, denom, res0, dyn):
+        P, N = pref.shape[1], pref.shape[2]
+        tp = min(tile_p or (P if interpret else 128), P)
+        Pp = ((P + tp - 1) // tp) * tp
+        tn = min(tile_n, N)
+        Np = ((N + tn - 1) // tn) * tn
+        node_of = placement_commit_pallas(
+            _pad_to(_pad_to(pref, Pp, 1), Np, 2),
+            _pad_to(req, Pp, 1),
+            _pad_to(_pad_to(ok, Pp, 1), Np, 2),
+            _pad_to(valid, Pp, 1),
+            _pad_to(total, Np, 1, fill=-1.0),  # padded nodes can never fit
+            _pad_to(denom, Np, 1, fill=1.0),   # keep the re-score finite
+            _pad_to(res0, Np, 1),
+            dyn, n_lanes=n_lanes, mode=mode, tile_p=tp, interpret=interpret)
+        return node_of[:, :P]
+
+    @custom_vmap
+    def commit(pref, req, ok, valid, total, denom, res0, dyn):
+        args = (pref, req, ok, valid, total, denom, res0, dyn)
+        return call_batched(1, *(x[None] for x in args))[0]
+
+    @commit.def_vmap
+    def _batched_rule(axis_size, in_batched, *args):
+        # unbatched (lane-shared) operands keep a size-1 lane axis — the
+        # kernel broadcasts them instead of materialising B copies
+        lanes = [x if b else x[None] for x, b in zip(args, in_batched)]
+        return call_batched(axis_size, *lanes), True
+
+    return commit
+
+
+def placement_commit(pref, req, base_ok, valid, total, denom, reserved0,
+                     dynamic_bestfit=False, *, use_kernel: bool = False,
+                     interpret: bool = True, tile_p: Optional[int] = None,
+                     tile_n: int = 128) -> jax.Array:
+    """Sequential capacity-checked assignment in priority (row) order.
+
+    pref (P,N) f32 preference scores, req (P,R) f32 requests, base_ok (P,N)
+    bool feasibility, valid (P,) bool, total (N,R) f32 with inactive nodes
+    folded to -1, denom (N,R) f32 best-fit normaliser, reserved0 (N,R) f32
+    starting tally -> node_of (P,) i32 (-1 = not placed). Bit-identical
+    between the Pallas kernel (TPU target; interpret=True on CPU) and the
+    pure-jnp reference — the engine invariant (no overcommit) is enforced by
+    both. ``dynamic_bestfit`` may be a traced bool scalar (per-lane scheduler
+    dispatch in the scenario fleet); static True/False specialise the kernel
+    to skip the unused score path.
+
+    Under ``jax.vmap`` the kernel path dispatches through a ``custom_vmap``
+    rule to one natively-batched kernel call (lane axis inside the block) —
+    Pallas's default batching would serialise lanes into extra grid steps.
+
+    Not jit-wrapped here: every caller (engine scan, scenario fleet, tests)
+    already traces it, and a jit boundary would force the static/traced
+    distinction of ``dynamic_bestfit`` into the signature.
+
+    ``tile_p=None`` picks the default task tile: the whole batch under
+    ``interpret`` (CPU — there is no VMEM budget and each grid step costs a
+    trip through the interpreter loop) and 128 rows on a real TPU (keeps the
+    per-step pref block comfortably inside VMEM at cell-A node counts).
+    """
+    if not use_kernel:
+        return placement_commit_ref(pref, req, base_ok, valid, total, denom,
+                                    reserved0, dynamic_bestfit)
+
+    if isinstance(dynamic_bestfit, jax.Array):
+        mode = "both"
+        dyn = dynamic_bestfit.astype(jnp.int32).reshape(1)
+    else:
+        mode = "dynamic" if dynamic_bestfit else "static"
+        dyn = jnp.full((1,), int(bool(dynamic_bestfit)), jnp.int32)
+
+    commit = _make_commit(mode, tile_p, tile_n, interpret)
+    return commit(pref, req, base_ok, valid, total, denom, reserved0, dyn)

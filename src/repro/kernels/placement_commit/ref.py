@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the placement-commit kernel: the sequential
+capacity-checked assignment loop lifted verbatim out of the seed scheduler
+finaliser (core/schedulers.py `_finalize`), so the kernel and the engine are
+validated against a single source of truth.
+
+The loop walks the P pending tasks in priority order; each step re-checks
+resource fit against the *running* reservation tally (no proposal can
+overcommit a node, whatever preference matrix it hands over) and either
+assigns the argmax-feasible node or leaves the task pending (-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -jnp.inf
+
+
+def placement_commit_ref(pref: jax.Array, req: jax.Array, base_ok: jax.Array,
+                         valid: jax.Array, total: jax.Array,
+                         denom: jax.Array, reserved0: jax.Array,
+                         dynamic_bestfit=False) -> jax.Array:
+    """pref (P,N) f32, req (P,R) f32, base_ok (P,N) bool, valid (P,) bool,
+    total (N,R) f32 (inactive nodes folded to -1), denom (N,R) f32,
+    reserved0 (N,R) f32 -> node_of (P,) i32 (-1 = not placed).
+
+    dynamic_bestfit: recompute best-fit scores against the running
+    reservation tally (true best-fit-decreasing) instead of the static pref.
+    May be a traced bool scalar (the scenario fleet dispatches schedulers
+    per-lane at runtime); the static True/False fast paths stay unchanged.
+    """
+    P = pref.shape[0]
+    is_traced = isinstance(dynamic_bestfit, jax.Array)
+
+    def body(i, carry):
+        reserved, node_of = carry
+        free = total - reserved                                 # (N, R)
+        fit = (req[i][None, :] <= free + 1e-9).all(-1) & base_ok[i]
+        if is_traced or dynamic_bestfit:
+            sc_dyn = -((free - req[i][None, :]) / denom).sum(-1)
+        if is_traced:
+            sc = jnp.where(dynamic_bestfit, sc_dyn, pref[i])
+            sc = jnp.where(fit, sc, NEG)
+        elif dynamic_bestfit:
+            sc = jnp.where(fit, sc_dyn, NEG)
+        else:
+            sc = jnp.where(fit, pref[i], NEG)
+        n = jnp.argmax(sc).astype(jnp.int32)
+        can = fit[n] & valid[i]
+        add = jnp.where(can, req[i], 0.0)
+        reserved = reserved.at[n].add(add)
+        node_of = node_of.at[i].set(jnp.where(can, n, -1))
+        return reserved, node_of
+
+    node_of0 = jnp.full((P,), -1, jnp.int32)
+    _, node_of = jax.lax.fori_loop(0, P, body, (reserved0, node_of0))
+    return node_of

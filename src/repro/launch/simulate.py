@@ -62,7 +62,10 @@ def main(argv=None):
     ap.add_argument("--tasks", type=int, default=None)
     ap.add_argument("--jobs", type=int, default=400)
     ap.add_argument("--windows", type=int, default=200)
-    ap.add_argument("--scheduler", default="greedy")
+    ap.add_argument("--scheduler", default="greedy",
+                    help="any repro.sched registry name (plugins included)")
+    ap.add_argument("--list-schedulers", action="store_true",
+                    help="print the scheduler registry and exit")
     ap.add_argument("--speed-factor", type=float, default=0.0)
     ap.add_argument("--use-kernels", action="store_true",
                     help="Pallas kernels (interpret mode on CPU)")
@@ -73,6 +76,11 @@ def main(argv=None):
     ap.add_argument("--batch-windows", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.list_schedulers:
+        from repro.sched import describe_schedulers
+        print(describe_schedulers())
+        raise SystemExit(0)
 
     cfg = build_cfg(args)
     tmp = None

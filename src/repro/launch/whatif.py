@@ -106,7 +106,10 @@ def main(argv=None):
     ap.add_argument("--jobs", type=int, default=400)
     ap.add_argument("--windows", type=int, default=200)
     ap.add_argument("--schedulers", default="greedy",
-                    help="comma list; every scheduler multiplies the grid")
+                    help="comma list; every scheduler multiplies the grid "
+                         "(any repro.sched registry name, plugins included)")
+    ap.add_argument("--list-schedulers", action="store_true",
+                    help="print the scheduler registry and exit")
     ap.add_argument("--outage", default=None, help="comma list of fractions")
     ap.add_argument("--capacity", default=None, help="comma list of scales")
     ap.add_argument("--arrival", default=None,
@@ -137,6 +140,11 @@ def main(argv=None):
     ap.add_argument("--snapshot", default=None,
                     help="write a batched fleet snapshot here at the end")
     args = ap.parse_args(argv)
+
+    if args.list_schedulers:
+        from repro.sched import describe_schedulers
+        print(describe_schedulers())
+        raise SystemExit(0)
 
     cfg = build_cfg(args)
     if args.replay:

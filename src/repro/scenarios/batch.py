@@ -5,7 +5,9 @@ mirrors ``engine.make_window_step`` exactly (same event-application order,
 same accounting recomputes) with two scenario hooks spliced in:
 
 * the incoming window passes through :func:`perturb.perturb_window`;
-* after invalid-placement eviction, :func:`perturb.storm_evict` runs;
+* after invalid-placement eviction, :func:`perturb.storm_evict` runs, then
+  :func:`perturb.expire_injected` retires amplification clones whose
+  sampled lifetime expired (injected-task lifecycles);
 * the scheduler is dispatched with ``lax.switch`` over the scenario's
   scheduler index, so scenarios may differ in scheduler inside one program.
 
@@ -37,8 +39,8 @@ from repro.distributed.sharding import import_shard_map
 from repro.core import engine as eng
 from repro.core import stats as stats_mod
 from repro.core.events import EventWindow
-from repro.core.schedulers import (DYNAMIC_BESTFIT, PROPOSERS, _base,
-                                   _finalize, get_scheduler)
+from repro.sched import (DYNAMIC_BESTFIT, PROPOSERS, base_pass, finalize,
+                         get_scheduler)
 from repro.core.state import SimState, init_state
 from repro.scenarios import perturb
 from repro.scenarios.spec import ScenarioKnobs
@@ -88,13 +90,15 @@ def init_batched_state(cfg: SimConfig, n_scenarios: int,
 def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
     """Single-scenario (unbatched) step; vmap adds the scenario axis.
 
-    Scheduler dispatch exploits the shared structure of core.schedulers:
-    every scheduler is `_base` (constraint matching + pending top-k) ->
-    per-scheduler *proposal* -> `_finalize` (capacity-checked assignment).
+    Scheduler dispatch exploits the shared structure of repro.sched:
+    every scheduler is `base_pass` (constraint matching + pending top-k) ->
+    per-scheduler *proposal* -> `finalize` (capacity-checked assignment).
     Only the cheap proposal goes through ``lax.switch`` — the expensive
     shared passes run once per lane regardless of how many schedulers the
     fleet mixes (a vmapped switch executes every branch, so keeping the
-    branches thin matters).
+    branches thin matters). The proposal table comes from the scheduler
+    registry, so lanes may name plugins registered via
+    ``repro.sched.register_scheduler``.
     """
     proposers = tuple(PROPOSERS[n] for n in scheduler_names)
     dyn_table = jnp.asarray([DYNAMIC_BESTFIT[n] for n in scheduler_names])
@@ -102,14 +106,14 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
     def dispatch(state: SimState, rng: jax.Array, idx: jax.Array) -> SimState:
         if len(proposers) == 1:     # no switch needed — keeps lane 0 trivial
             return get_scheduler(scheduler_names[0])(state, cfg, rng)
-        pend_idx, valid, base_ok, scores = _base(state, cfg)
+        pend_idx, valid, base_ok, scores = base_pass(state, cfg)
         pref = jax.lax.switch(
             idx,
             [lambda s, r, pi, v, bo, sc, fn=fn: fn(s, cfg, r, pi, v, bo, sc)
              for fn in proposers],
             state, rng, pend_idx, valid, base_ok, scores)
-        return _finalize(state, cfg, pend_idx, valid, base_ok, pref,
-                         dynamic_bestfit=dyn_table[idx])
+        return finalize(state, cfg, pend_idx, valid, base_ok, pref,
+                        dynamic_bestfit=dyn_table[idx])
 
     def step(state: SimState, w: EventWindow, rng: jax.Array,
              knobs: ScenarioKnobs
@@ -126,6 +130,8 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
         state = eng.recompute_accounting(state, cfg)
         state = eng.evict_invalid(state, cfg)
         state = perturb.storm_evict(state, knobs, cfg)
+        if cfg.inject_slots:
+            state = perturb.expire_injected(state, knobs, cfg)
         state = eng.recompute_accounting(state, cfg)
         state = dispatch(state, rng, knobs.sched_idx)
         state = eng.recompute_accounting(state, cfg)

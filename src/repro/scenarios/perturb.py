@@ -37,6 +37,10 @@ Semantics of the knobs (see spec.ScenarioSpec for the user-facing docs):
 * usage inflation: UPDATE_TASK_USED payloads are scaled.
 * eviction storm: each window, a hashed fraction of *running* tasks is
   forcibly evicted back to pending (applied to state, not events).
+* injected-task lifecycles: amplification clones get a synthesised REMOVE
+  after a deterministic per-slot lifetime (``expire_injected``, applied to
+  state like the storm), counted as completions — amplified lanes churn
+  instead of pinning their pool slots until recycling.
 """
 from __future__ import annotations
 
@@ -45,7 +49,7 @@ import jax.numpy as jnp
 
 from repro.config import SimConfig
 from repro.core.events import EventKind, EventWindow
-from repro.core.state import SimState, TASK_PENDING, TASK_RUNNING
+from repro.core.state import SimState, TASK_EMPTY, TASK_PENDING, TASK_RUNNING
 from repro.scenarios.spec import ScenarioKnobs
 
 # distinct per-knob salt offsets so one slot's fates are independent draws
@@ -54,6 +58,7 @@ _SALT_THIN = 0x2
 _SALT_SURGE = 0x4
 _SALT_STORM = 0x5
 _SALT_INJECT = 0x6
+_SALT_LIFETIME = 0x7
 
 
 def hash01(x: jax.Array, salt: int, cfg: SimConfig) -> jax.Array:
@@ -185,6 +190,46 @@ def inject_arrivals(w: EventWindow, k: ScenarioKnobs, cfg: SimConfig,
         attr_val=put(w.attr_val, w.attr_val[src]),
         t_off=put(w.t_off, w.t_off[src]),
     )
+
+
+def expire_injected(state: SimState, k: ScenarioKnobs, cfg: SimConfig
+                    ) -> SimState:
+    """Injected-task lifecycles: synthesised REMOVEs after a sampled duration.
+
+    Trace tasks carry their own REMOVE events, but injected clones have no
+    future in the stream — without this pass they run until their pool slot
+    recycles, so amplified lanes add load that never churns. Each pool slot
+    ``q`` gets a deterministic lifetime ``dur(q)`` in ``[1, L-1]`` windows
+    (L = floor(pool / S), the slot-recycle period, so a REMOVE always fires
+    before its slot is re-injected): the clone injected into ``q`` at window
+    ``w0`` is removed — counted as a completion, exactly like a trace REMOVE
+    — at window ``w0 + dur(q)``. Membership is closed-form (slot q was an
+    injection target at w0 iff ``(q - w0*S) mod pool < S``) and the pass
+    only ever touches *live* slots in the reserved pool, so lanes with
+    ``arrival_rate <= 1`` (no injections, empty pool) are a bitwise no-op —
+    the fleet's lane-0 identity guarantee survives.
+    """
+    S = cfg.inject_slots
+    pool = cfg.resolved_inject_task_slots
+    L = pool // S if S else 0
+    if L <= 1:      # pool recycles immediately — no room for a lifetime
+        return state
+    q = jnp.arange(pool, dtype=jnp.int32)
+    dur = 1 + jnp.floor(hash01(q.astype(jnp.uint32), _SALT_LIFETIME, cfg)
+                        * (L - 1)).astype(jnp.int32)
+    dur = jnp.clip(dur, 1, L - 1)
+    w0 = state.window - dur                       # candidate injection window
+    injected_then = jnp.mod(q - w0 * S, pool) < S
+    rows = cfg.real_task_slots + q
+    live = state.task_state[rows] != TASK_EMPTY
+    victim = injected_then & (w0 >= 0) & live & (k.arrival_rate > 1.0)
+    n = jnp.sum(victim).astype(jnp.int32)
+    task_state = state.task_state.at[rows].set(
+        jnp.where(victim, jnp.int8(TASK_EMPTY), state.task_state[rows]))
+    task_node = state.task_node.at[rows].set(
+        jnp.where(victim, -1, state.task_node[rows]))
+    return state._replace(task_state=task_state, task_node=task_node,
+                          completions=state.completions + n)
 
 
 def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:

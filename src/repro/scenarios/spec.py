@@ -16,7 +16,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedulers import SCHEDULERS
+from repro.sched import SCHEDULERS
 
 
 @dataclass(frozen=True)

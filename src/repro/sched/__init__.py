@@ -1,0 +1,53 @@
+"""Pluggable schedulers — the paper's §IV use case (MASB): AGOCS feeds the
+same workload to several schedulers under test, and this package is where
+they plug in.
+
+Layout (one concern per module):
+
+  base.py            pending-batch selection + constraint_match scoring —
+                     the shared passes every scheduler consumes
+  heuristics.py      greedy / first_fit / round_robin / random proposals
+  metaheuristics.py  SA / tabu / GA sharing one argmax-placement surrogate
+  commit.py          the capacity-checked finaliser (no proposal can
+                     overcommit a node) — kernels/placement_commit inside
+  registry.py        register_scheduler(): plug in new schedulers by name;
+                     SCHEDULERS / PROPOSERS / DYNAMIC_BESTFIT are derived
+
+Every scheduler is pure-JAX with signature ``(state, cfg, rng) -> state``
+and is vmap-able: hundreds of scheduler replicas can consume one workload in
+parallel on the 'data' mesh axis (the paper runs 5 concurrently on a
+laptop). A scheduler is just a *proposal* — a (P, N) preference matrix —
+between the two shared passes; see ``registry.register_scheduler`` for the
+plugin API and README "Scheduler registry" for a worked example.
+
+``repro.core.schedulers`` remains as a thin re-export shim for one release.
+"""
+from repro.sched.base import NEG, base_pass, pending_batch
+from repro.sched.commit import finalize
+from repro.sched.registry import (DYNAMIC_BESTFIT, PROPOSERS, SCHEDULERS,
+                                  SchedulerEntry, describe_schedulers,
+                                  get_entry, get_scheduler, list_schedulers,
+                                  register_scheduler, unregister_scheduler)
+
+# importing the built-in modules registers them (order fixes registry order)
+from repro.sched.heuristics import (first_fit, greedy, propose_first_fit,
+                                    propose_greedy, propose_random,
+                                    propose_round_robin, random_fit,
+                                    round_robin)
+from repro.sched.metaheuristics import (argmax_surrogate, balance_objective,
+                                        genetic, propose_genetic,
+                                        propose_simulated_annealing,
+                                        propose_tabu_search,
+                                        simulated_annealing, tabu_search)
+
+__all__ = [
+    "NEG", "base_pass", "pending_batch", "finalize",
+    "SCHEDULERS", "PROPOSERS", "DYNAMIC_BESTFIT", "SchedulerEntry",
+    "register_scheduler", "unregister_scheduler", "get_scheduler",
+    "get_entry", "list_schedulers", "describe_schedulers",
+    "greedy", "first_fit", "round_robin", "random_fit",
+    "simulated_annealing", "tabu_search", "genetic",
+    "propose_greedy", "propose_first_fit", "propose_round_robin",
+    "propose_random", "propose_simulated_annealing", "propose_tabu_search",
+    "propose_genetic", "argmax_surrogate", "balance_objective",
+]

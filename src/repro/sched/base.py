@@ -1,0 +1,49 @@
+"""Shared scheduler front-end: pending-batch selection + constraint scoring.
+
+Every scheduler in the registry consumes the same two passes before its
+proposal runs:
+
+* :func:`pending_batch` — top-P pending task slots by priority (descending),
+  the fixed-size working set a window's scheduling pass considers;
+* :func:`base_pass` — the (P, N) constraint-match/best-fit score matrix from
+  the ``constraint_match`` kernel, plus the derived feasibility mask.
+
+Keeping these out of the per-scheduler code is what lets the scenario fleet
+``lax.switch`` over *proposals only*: the expensive shared passes run once
+per lane no matter how many schedulers the fleet mixes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SimConfig
+from repro.core.state import SimState, TASK_PENDING
+from repro.kernels.constraint_match.ops import constraint_match
+
+NEG = -jnp.inf
+
+
+def pending_batch(state: SimState, cfg: SimConfig):
+    """Top-P pending task slots by priority (descending)."""
+    P = cfg.sched_batch
+    pend = state.task_state == TASK_PENDING
+    key = jnp.where(pend, state.task_prio, jnp.iinfo(jnp.int32).min)
+    _, idx = jax.lax.top_k(key, P)
+    valid = pend[idx]
+    return idx, valid
+
+
+def base_pass(state: SimState, cfg: SimConfig):
+    """Pending batch + constraint-match scores: (idx, valid, base_ok, scores).
+
+    scores is (P, N) f32 with -inf for infeasible (task, node) pairs;
+    base_ok is its finiteness mask.
+    """
+    idx, valid = pending_batch(state, cfg)
+    scores = constraint_match(
+        state.task_req[idx], state.task_constraints[idx],
+        state.node_total, state.node_reserved, state.node_attrs,
+        state.node_active, use_kernel=cfg.use_kernels)         # (P, N)
+    base_ok = jnp.isfinite(scores)
+    return idx, valid, base_ok, scores

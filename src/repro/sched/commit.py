@@ -1,0 +1,47 @@
+"""The capacity-checked finaliser every scheduler shares.
+
+Proposals only rank nodes; *this* pass decides. An in-priority-order scan
+re-checks resource fit against the running reservation tally, so **no
+scheduler can overcommit a node** regardless of what it proposes — the
+engine invariant the tests verify. The scan itself lives in
+``kernels/placement_commit`` (Pallas kernel + jnp reference, dispatched on
+``cfg.use_kernels`` like every other kernelised pass); this module derives
+the kernel operands from the simulation state and applies the resulting
+assignment vector back to it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SimConfig
+from repro.core.state import SimState, TASK_RUNNING
+from repro.kernels.placement_commit.ops import placement_commit
+
+
+def finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
+             dynamic_bestfit=False) -> SimState:
+    """Sequential capacity-checked assignment in priority order.
+
+    pref: (P, N) preference scores (higher better; NEG = never).
+    dynamic_bestfit: recompute best-fit scores against the *running*
+    reservation tally (true best-fit-decreasing) instead of static pref.
+    May be a traced bool scalar (the scenario fleet dispatches schedulers
+    per-lane at runtime); the static True/False fast paths stay unchanged.
+    """
+    total = jnp.where(state.node_active[:, None], state.node_total, -1.0)
+    denom = jnp.maximum(state.node_total, 1e-6)
+    req = state.task_req[idx]                                   # (P, R)
+
+    node_of = placement_commit(pref, req, base_ok, valid, total, denom,
+                               state.node_reserved, dynamic_bestfit,
+                               use_kernel=cfg.use_kernels)
+
+    placed = node_of >= 0
+    task_state = state.task_state.at[idx].set(
+        jnp.where(placed, TASK_RUNNING, state.task_state[idx]).astype(jnp.int8))
+    task_node = state.task_node.at[idx].set(
+        jnp.where(placed, node_of, state.task_node[idx]))
+    return state._replace(
+        task_state=task_state, task_node=task_node,
+        placements=state.placements + placed.sum().astype(jnp.int32))

@@ -1,0 +1,51 @@
+"""Classic placement heuristics — greedy best-fit, first-fit, round-robin,
+random — as registry proposals.
+
+Each is a *proposal*: it only ranks nodes per task; the shared finaliser
+(``sched.commit``) re-checks capacity in priority order, so none of them can
+overcommit however they rank.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sched.registry import register_scheduler
+
+
+def propose_greedy(state, cfg, rng, idx, valid, base_ok, scores):
+    """Best-fit decreasing: tightest feasible node, re-scored dynamically
+    against the running reservation tally (pref is unused — the returned
+    scores only pin the shape/dtype)."""
+    return scores
+
+
+def propose_first_fit(state, cfg, rng, idx, valid, base_ok, scores):
+    """First-fit: lowest-index feasible node."""
+    return -jnp.broadcast_to(
+        jnp.arange(cfg.max_nodes, dtype=jnp.float32)[None, :], base_ok.shape)
+
+
+def propose_round_robin(state, cfg, rng, idx, valid, base_ok, scores):
+    """Round-robin: first-fit from a start index that rotates per window."""
+    start = (state.window * 131) % cfg.max_nodes
+    order = (jnp.arange(cfg.max_nodes) - start) % cfg.max_nodes
+    return -jnp.broadcast_to(order.astype(jnp.float32)[None, :],
+                             base_ok.shape)
+
+
+def propose_random(state, cfg, rng, idx, valid, base_ok, scores):
+    """Random feasible node (uniform preference draw)."""
+    return jax.random.uniform(rng, base_ok.shape)
+
+
+greedy = register_scheduler("greedy", propose_greedy, dynamic_bestfit=True,
+                            doc="Best-fit decreasing: tightest feasible "
+                                "node, re-scored dynamically.")
+first_fit = register_scheduler("first_fit", propose_first_fit,
+                               doc="First-fit: lowest-index feasible node.")
+round_robin = register_scheduler("round_robin", propose_round_robin,
+                                 doc="Round-robin over node indices, "
+                                     "rotating start per window.")
+random_fit = register_scheduler("random", propose_random,
+                                doc="Random feasible node (uniform draw).")

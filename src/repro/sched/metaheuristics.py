@@ -1,0 +1,161 @@
+"""Meta-heuristic schedulers — simulated annealing, tabu search, genetic —
+the paper's §IV MASB suite (meta-heuristics of [22]).
+
+All three search over (P, N) preference matrices and score candidates with
+the SAME cheap surrogate (:func:`argmax_surrogate`): every task goes to its
+argmax node, capacity ignored, and the objective is the balance of the
+resulting trial reservation — the finaliser enforces capacity later. The
+surrogate used to be copy-pasted into each scheduler; it is deduplicated
+here, behaviour locked by the scheduler determinism tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sched.base import NEG
+from repro.sched.registry import register_scheduler
+
+
+def balance_objective(reserved, total, active):
+    """Variance of per-node reservation fraction (lower = better balanced)."""
+    frac = jnp.where(active[:, None], reserved / jnp.maximum(total, 1e-9), 0.0)
+    f = frac.mean(-1)
+    na = jnp.maximum(active.sum(), 1)
+    mu = f.sum() / na
+    return jnp.where(active, (f - mu) ** 2, 0.0).sum() / na
+
+
+def argmax_surrogate(state, idx, valid, base_ok):
+    """The shared trial-placement surrogate: ``(trial_reserved, energy)``.
+
+    trial_reserved(pref_m): cheap surrogate placement — every task goes to
+    its argmax node (capacity ignored; the finaliser enforces it later) and
+    the implied requests are summed onto the current reservation matrix.
+
+    energy(pref_m): post-placement reservation balance of that trial
+    (lower = better). GA fitness is its negation.
+    """
+    N = base_ok.shape[1]
+    weight = (valid & base_ok.any(1))[:, None]
+    req = state.task_req[idx]
+
+    def trial_reserved(pref_m):
+        choice = jnp.argmax(jnp.where(base_ok, pref_m, NEG), axis=1)
+        onehot = jax.nn.one_hot(choice, N, dtype=jnp.float32) * weight
+        return state.node_reserved + onehot.T @ req
+
+    def energy(pref_m):
+        return balance_objective(trial_reserved(pref_m), state.node_total,
+                                 state.node_active)
+
+    return trial_reserved, energy
+
+
+def propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
+                                scores, n_steps: int = 64, t0: float = 0.1):
+    """Anneal a random feasible preference toward balanced placements.
+    Objective: post-placement reservation balance."""
+    P, N = base_ok.shape
+    k_init, k_steps = jax.random.split(rng)
+    pref = jax.random.uniform(k_init, (P, N))
+    _, energy = argmax_surrogate(state, idx, valid, base_ok)
+
+    def body(i, carry):
+        pref_m, e, key = carry
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        p = jax.random.randint(k1, (), 0, P)
+        n = jax.random.randint(k2, (), 0, N)
+        cand = pref_m.at[p, n].add(1.0)       # push task p toward node n
+        e_new = energy(cand)
+        temp = t0 * (1.0 - i / n_steps) + 1e-6
+        accept = (e_new < e) | (jax.random.uniform(k3) <
+                                jnp.exp(-(e_new - e) / temp))
+        pref_m = jnp.where(accept, cand, pref_m)
+        e = jnp.where(accept, e_new, e)
+        return pref_m, e, key
+
+    pref, _, _ = jax.lax.fori_loop(0, n_steps, body,
+                                   (pref, energy(pref), k_steps))
+    return pref
+
+
+def propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores,
+                        n_steps: int = 48, tenure: int = 8):
+    """Tabu search (paper §IV names it among the MASB schedulers): greedy
+    local moves on the preference surrogate with a short-term memory that
+    forbids revisiting recently-touched (task) coordinates."""
+    P, N = base_ok.shape
+    k_init, k_steps = jax.random.split(rng)
+    pref = jnp.where(jnp.isfinite(scores), scores, 0.0) + \
+        0.01 * jax.random.uniform(k_init, (P, N))
+    _, energy = argmax_surrogate(state, idx, valid, base_ok)
+
+    def body(i, carry):
+        pref_m, e_best, best, tabu_until, key = carry
+        key, k1, k2 = jax.random.split(key, 3)
+        p = jax.random.randint(k1, (), 0, P)
+        n = jax.random.randint(k2, (), 0, N)
+        allowed = tabu_until[p] <= i
+        cand = pref_m.at[p, n].add(jnp.where(allowed, 1.0, 0.0))
+        e_new = energy(cand)
+        improve = (e_new < e_best) & allowed
+        # aspiration: accept any improving move; otherwise keep best-so-far
+        pref_m = jnp.where(improve, cand, pref_m)
+        best = jnp.where(improve, cand, best)
+        e_best = jnp.where(improve, e_new, e_best)
+        tabu_until = tabu_until.at[p].set(
+            jnp.where(allowed, i + tenure, tabu_until[p]))
+        return pref_m, e_best, best, tabu_until, key
+
+    e0 = energy(pref)
+    _, _, best, _, _ = jax.lax.fori_loop(
+        0, n_steps, body, (pref, e0, pref, jnp.zeros((P,), jnp.int32),
+                           k_steps))
+    return best
+
+
+def propose_genetic(state, cfg, rng, idx, valid, base_ok, scores,
+                    pop: int = 8, gens: int = 4, mut_rate: float = 0.15):
+    """Small GA over preference matrices (the paper's 4 GA variants, seeded
+    and unseeded, distilled): tournament-free truncation selection + mutation;
+    fitness = placement balance of the argmax surrogate."""
+    P, N = base_ok.shape
+    keys = jax.random.split(rng, pop + 1)
+    population = jax.vmap(lambda k: jax.random.uniform(k, (P, N)))(keys[:pop])
+    # seed one individual with the best-fit scores (the paper's 'seeded GA')
+    population = population.at[0].set(
+        jnp.where(jnp.isfinite(scores), scores, 0.0))
+    _, energy = argmax_surrogate(state, idx, valid, base_ok)
+
+    def fitness(pref_m):
+        return -energy(pref_m)
+
+    def gen_step(carry, key):
+        population = carry
+        fit = jax.vmap(fitness)(population)
+        order = jnp.argsort(-fit)
+        elite = population[order[: pop // 2]]
+        k1, k2 = jax.random.split(key)
+        parents = jnp.concatenate([elite, elite], axis=0)
+        mask = jax.random.uniform(k1, parents.shape) < mut_rate
+        noise = jax.random.uniform(k2, parents.shape)
+        children = jnp.where(mask, noise, parents)
+        children = children.at[0].set(elite[0])   # elitism
+        return children, None
+
+    population, _ = jax.lax.scan(gen_step, population,
+                                 jax.random.split(keys[pop], gens))
+    fit = jax.vmap(fitness)(population)
+    return population[jnp.argmax(fit)]
+
+
+simulated_annealing = register_scheduler(
+    "simulated_annealing", propose_simulated_annealing,
+    doc="Simulated annealing toward balanced placements.")
+tabu_search = register_scheduler(
+    "tabu_search", propose_tabu_search,
+    doc="Tabu search with short-term move memory.")
+genetic = register_scheduler(
+    "genetic", propose_genetic,
+    doc="Genetic algorithm over preference matrices (seeded GA).")

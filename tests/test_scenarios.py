@@ -356,6 +356,74 @@ def test_amplification_schedules_strictly_more_tasks():
         assert validate_invariants(lane, cfg) == {}
 
 
+def test_expire_injected_removes_exactly_the_due_clone():
+    """A clone injected into pool slot q at window w0 is REMOVEd (counted as
+    a completion) exactly at window w0 + dur(q), and never touches slots
+    outside the reserved pool."""
+    cfg = INJECT_CFG
+    S, pool = cfg.inject_slots, cfg.resolved_inject_task_slots
+    L = pool // S
+    q = 3                                    # pool slot under test
+    dur = int(1 + np.floor(float(perturb.hash01(
+        jnp.uint32(q), perturb._SALT_LIFETIME, cfg)) * (L - 1)))
+    w0 = (q // S) % L                        # a window that injects into q
+    assert (q - w0 * S) % pool < S
+    k, _ = _knobs(arrival_rate=2.0)
+    state = init_state(cfg)
+    row = cfg.real_task_slots + q
+    state = state._replace(
+        task_state=state.task_state.at[row].set(TASK_RUNNING)
+        .at[0].set(TASK_RUNNING),            # a real task that must survive
+        window=jnp.int32(w0 + dur))
+    out = perturb.expire_injected(state, k, cfg)
+    assert int(out.task_state[row]) == int(np.int8(0))        # TASK_EMPTY
+    assert int(out.task_state[0]) == TASK_RUNNING
+    assert int(out.completions) == int(state.completions) + 1
+    # one window earlier the clone is still alive
+    early = perturb.expire_injected(
+        state._replace(window=jnp.int32(w0 + dur - 1)), k, cfg)
+    assert int(early.task_state[row]) == TASK_RUNNING
+
+
+def test_expire_injected_is_bitwise_noop_without_amplification():
+    """rate <= 1 lanes (and empty pools) must pass through bit-for-bit —
+    the lane-0 identity guarantee extends to the lifecycle pass."""
+    cfg = INJECT_CFG
+    state = init_state(cfg)
+    state = state._replace(
+        task_state=state.task_state.at[:10].set(TASK_RUNNING),
+        window=jnp.int32(7))
+    k, _ = _knobs()                          # arrival_rate == 1.0
+    out = perturb.expire_injected(state, k, cfg)
+    for f in out._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                      np.asarray(getattr(state, f)),
+                                      err_msg=f)
+
+
+def test_amplified_lane_records_strictly_more_completions():
+    """The lifecycle property from the roadmap: amplified lanes must CHURN —
+    strictly more completions than baseline, not just more placements —
+    because injected clones now carry synthesised REMOVEs."""
+    cfg = INJECT_CFG
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=32, n_jobs=40, horizon_windows=30,
+                       seed=23, usage_period_us=10_000_000)
+        specs = [ScenarioSpec(name="base"),
+                 ScenarioSpec(name="amp", arrival_rate=2.0)]
+        fleet = ScenarioFleet(cfg, GCDParser(cfg, d).packed_windows(
+            35, start_us=SHIFT_US - cfg.window_us), specs, batch_windows=35)
+        fleet.run()
+        frame = fleet.stats_frame()
+        comp = np.asarray(frame["completions"])[-1]
+        injected = np.asarray(frame["injected_arrivals"]).sum(0)
+        assert injected[1] > 0
+        assert comp[1] > comp[0], (comp, injected)
+        # the amplified lane still satisfies every engine invariant
+        lane = jax.tree.map(lambda x: x[1], fleet.state)
+        assert validate_invariants(lane, cfg) == {}
+
+
 def test_identity_lane_with_slot_pool_matches_run_windows():
     """inject_slots > 0 reshapes every packed window (reserved PAD tail) —
     lane 0 with amplification 1.0 must STILL be bit-identical to the
@@ -381,6 +449,37 @@ def test_identity_lane_with_slot_pool_matches_run_windows():
         for key in sf:
             np.testing.assert_array_equal(
                 np.asarray(sf[key]), np.asarray(ff_[key])[:, 0], err_msg=key)
+
+
+def test_fleet_kernel_path_matches_ref_path():
+    """use_kernels=True routes the fleet's commit through the custom_vmap
+    batched placement-commit kernel (and constraint_match through its
+    kernel) — per-lane placements must match the jnp reference path."""
+    cfg_ref = CFG
+    cfg_ker = dataclasses.replace(CFG, use_kernels=True)
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=24, n_jobs=30, horizon_windows=20,
+                       seed=29, usage_period_us=10_000_000)
+        start = SHIFT_US - CFG.window_us
+        specs = [ScenarioSpec(name="base"),
+                 ScenarioSpec(name="ff", scheduler="first_fit"),
+                 ScenarioSpec(name="outage", node_outage_frac=0.2)]
+        fleets = {}
+        for label, cfg in (("ref", cfg_ref), ("ker", cfg_ker)):
+            f = ScenarioFleet(cfg, GCDParser(cfg, d).packed_windows(
+                25, start_us=start), specs, batch_windows=25)
+            f.run()
+            fleets[label] = f
+        for fld in fleets["ref"].state._fields:
+            a = np.asarray(getattr(fleets["ref"].state, fld))
+            b = np.asarray(getattr(fleets["ker"].state, fld))
+            if a.dtype.kind == "f":
+                np.testing.assert_allclose(a, b, atol=1e-5, err_msg=fld)
+            else:
+                np.testing.assert_array_equal(a, b, err_msg=fld)
+        np.testing.assert_array_equal(
+            np.asarray(fleets["ref"].stats_frame()["placements"]),
+            np.asarray(fleets["ker"].stats_frame()["placements"]))
 
 
 def test_fleet_rejects_amplification_without_slot_pool():

@@ -1,0 +1,143 @@
+"""Scheduler registry: the plugin API end-to-end.
+
+A scheduler registered by name must be a first-class citizen everywhere a
+name is accepted — the single-trajectory engine, a ScenarioSpec lane of the
+vmapped fleet (lax.switch dispatch over registry proposals), and the CLI
+listing — and the legacy ``repro.core.schedulers`` shim must keep exposing
+the same live registry views.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core import engine as eng
+from repro.core.events import EventKind, HostEvent, pack_window, stack_windows
+from repro.core.state import init_state, validate_invariants
+from repro.sched import (DYNAMIC_BESTFIT, PROPOSERS, SCHEDULERS,
+                         get_scheduler, list_schedulers, register_scheduler,
+                         unregister_scheduler)
+
+CFG = REDUCED_SIM
+
+BUILTINS = ("greedy", "first_fit", "round_robin", "random",
+            "simulated_annealing", "tabu_search", "genetic")
+
+
+def _propose_pack_left(state, cfg, rng, idx, valid, base_ok, scores):
+    """Prefer the most-reserved node (consolidation / bin-packing)."""
+    return jnp.broadcast_to(state.node_reserved.sum(-1)[None, :],
+                            base_ok.shape)
+
+
+@pytest.fixture
+def pack_left():
+    name = "_test_pack_left"
+    register_scheduler(name, _propose_pack_left)
+    yield name
+    unregister_scheduler(name)
+
+
+def _windows(n_nodes=8, n_tasks=24, seed=0):
+    r = np.random.default_rng(seed)
+    evs0 = [HostEvent(0, EventKind.ADD_NODE, i,
+                      a=(float(r.uniform(0.4, 1.0)),
+                         float(r.uniform(0.4, 1.0)), 1.0))
+            for i in range(n_nodes)]
+    evs1 = [HostEvent(1, EventKind.ADD_TASK, t,
+                      a=(float(r.uniform(0.02, 0.2)),
+                         float(r.uniform(0.02, 0.2)), 0.0),
+                      prio=int(r.integers(0, 12))) for t in range(n_tasks)]
+    return jax.tree.map(jnp.asarray, stack_windows(
+        [pack_window(CFG, evs0, 0), pack_window(CFG, evs1, 1)]))
+
+
+def test_builtins_present_in_registration_order():
+    names = [e.name for e in list_schedulers()]
+    assert tuple(names[:len(BUILTINS)]) == BUILTINS
+    assert set(SCHEDULERS) == set(PROPOSERS) == set(DYNAMIC_BESTFIT) \
+        == set(names)
+    assert DYNAMIC_BESTFIT["greedy"] and not DYNAMIC_BESTFIT["first_fit"]
+
+
+def test_registered_scheduler_runs_in_engine(pack_left):
+    state, stats = eng.run_windows(init_state(CFG), _windows(), CFG,
+                                   get_scheduler(pack_left))
+    assert validate_invariants(state, CFG) == {}
+    assert int(stats["placements"][-1]) > 0
+
+
+def test_registered_scheduler_dispatches_in_scenario_fleet(pack_left):
+    """A plugin named in a ScenarioSpec rides the fleet's lax.switch."""
+    from repro.scenarios import ScenarioSpec, build_knobs
+    from repro.scenarios import batch as batch_mod
+    specs = [ScenarioSpec(name="greedy"),
+             ScenarioSpec(name="plugin", scheduler=pack_left)]
+    knobs, names = build_knobs(specs)
+    assert names == ("greedy", pack_left)
+    step = batch_mod.make_scenario_step(CFG, names)
+    vstep = jax.vmap(step, in_axes=(0, None, None, 0))
+    state = batch_mod.init_batched_state(CFG, 2)
+    windows = _windows()
+    key = jax.random.PRNGKey(0)
+    for w in range(2):
+        win = jax.tree.map(lambda x: x[w], windows)
+        state, stats = vstep(state, win, key, knobs)
+    placed = np.asarray(stats["placements"])
+    assert (placed > 0).all()
+    for b in range(2):
+        lane = jax.tree.map(lambda x, b=b: x[b], state)
+        assert validate_invariants(lane, CFG) == {}, specs[b].name
+    # consolidation really differs from best-fit-decreasing
+    assert not np.array_equal(np.asarray(state.task_node[0]),
+                              np.asarray(state.task_node[1]))
+
+
+def test_spec_accepts_registered_name_and_rejects_unknown(pack_left):
+    from repro.scenarios import ScenarioSpec
+    ScenarioSpec(scheduler=pack_left)            # no raise
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        ScenarioSpec(scheduler="definitely_not_registered")
+
+
+def test_duplicate_name_rejected_unless_overwrite(pack_left):
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheduler(pack_left, _propose_pack_left)
+    replaced = register_scheduler(pack_left, _propose_pack_left,
+                                  dynamic_bestfit=True, overwrite=True)
+    assert SCHEDULERS[pack_left] is replaced
+    assert DYNAMIC_BESTFIT[pack_left]
+
+
+def test_shim_exposes_live_registry_views(pack_left):
+    """repro.core.schedulers must share the SAME dict objects, so plugins
+    registered after import are visible through the legacy module too."""
+    from repro.core import schedulers as shim
+    assert shim.SCHEDULERS is SCHEDULERS
+    assert shim.PROPOSERS is PROPOSERS
+    assert shim.DYNAMIC_BESTFIT is DYNAMIC_BESTFIT
+    assert pack_left in shim.SCHEDULERS
+    assert shim.get_scheduler(pack_left) is SCHEDULERS[pack_left]
+    # legacy underscore aliases still resolve
+    assert shim._base is shim.base_pass
+    assert shim._finalize is shim.finalize
+
+
+def test_describe_and_cli_listing(pack_left, capsys):
+    from repro.sched import describe_schedulers
+    text = describe_schedulers()
+    assert pack_left in text and "greedy" in text
+    from repro.launch import whatif
+    with pytest.raises(SystemExit):
+        whatif.main(["--list-schedulers"])
+    assert pack_left in capsys.readouterr().out
+    from repro.launch import simulate
+    with pytest.raises(SystemExit):
+        simulate.main(["--list-schedulers"])
+    assert pack_left in capsys.readouterr().out
+
+
+def test_get_scheduler_unknown_raises():
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        get_scheduler("nope")
