@@ -1,0 +1,329 @@
+"""Engine hot-loop benchmark: incremental accounting vs full recompute.
+
+Measures windows/sec through the jitted window scan — single-lane and the
+vmapped scenario fleet at B=8 — with ``cfg.incremental_accounting`` on
+(delta-maintained tallies, commit-kernel tally output, donated state
+buffers) against the pre-delta full-recompute path (three O(max_tasks)
+segment-sum recomputes per window), which stays available via
+``incremental_accounting=False``. Also:
+
+* verifies equivalence while timing: final placements (``task_node``)
+  bit-exact across modes, final accounting + stats allclose;
+* times the host-side staging path: the WindowPrefetcher's preallocated
+  buffer ring vs the per-batch ``np.stack`` it replaced;
+* reports end-to-end driver throughput (async stats + device-resident
+  batches) for the single-trajectory Simulation.
+
+The trace is synthetic and *grid-aligned* (every resource a multiple of
+1/128) so float sums are exact and the bit-exactness bar is meaningful.
+
+Writes ``BENCH_engine.json`` at the repo root. ``--quick`` shrinks shapes
+for the CI perf-smoke job; ``--check`` compares the measured
+incremental-vs-full speedups against the committed baseline and fails on a
+>20% regression (speedup ratios are machine-independent, unlike absolute
+windows/sec). Acceptance bar: >= 1.5x on the fleet B=8 CPU benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SimConfig
+from repro.core import engine as eng
+from repro.core import pipeline as pipe
+from repro.core.events import (EventKind, HostEvent, REMOVE_REASON_EVICT,
+                               pack_window, stack_windows)
+from repro.core.state import init_state
+from repro.scenarios import batch as batch_mod
+from repro.scenarios.spec import ScenarioSpec, build_knobs
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+JSON_PATH = REPO / "BENCH_engine.json"
+
+FLEET_B = 8
+# every knob exact-arithmetic so the cross-mode comparison stays bit-exact.
+# The headline fleet is storm-free — the common case, which ScenarioFleet
+# compiles with has_storm=False so the whole storm pass is dropped; the
+# storm variant (per-window masked debit passes) is reported separately.
+FLEET_SPECS = [
+    ScenarioSpec(name="base"),
+    ScenarioSpec(name="ff", scheduler="first_fit"),
+    ScenarioSpec(name="rr", scheduler="round_robin"),
+    ScenarioSpec(name="outage", node_outage_frac=0.25),
+    ScenarioSpec(name="half-cap", capacity_scale=0.5),
+    ScenarioSpec(name="thin", arrival_rate=0.5),
+    ScenarioSpec(name="surge", priority_surge_frac=0.5),
+    ScenarioSpec(name="usage", scheduler="first_fit", usage_scale=2.0),
+]
+STORM_SPECS = FLEET_SPECS[:6] + [
+    ScenarioSpec(name="storm", evict_storm_frac=0.25),
+    ScenarioSpec(name="ff-storm", scheduler="first_fit",
+                 evict_storm_frac=0.125),
+]
+
+
+def make_cfg(quick: bool) -> SimConfig:
+    # max_tasks dominates deliberately: the tentpole's win is the removal
+    # of O(max_tasks) recomputes, and the paper cell runs 262K task slots —
+    # small tables would hide the effect behind the (mode-independent)
+    # commit scan + constraint match cost
+    if quick:
+        return SimConfig(max_nodes=64, max_tasks=16_384,
+                         max_events_per_window=512, sched_batch=64,
+                         n_attr_slots=8, max_constraints=4)
+    return SimConfig(max_nodes=128, max_tasks=65_536,
+                     max_events_per_window=1_024, sched_batch=128,
+                     n_attr_slots=8, max_constraints=4)
+
+
+def _grid(r, lo, hi, q=128):
+    return float(r.integers(lo, hi)) / q
+
+
+def build_windows(cfg: SimConfig, n_windows: int, seed: int = 0):
+    """Synthetic grid-aligned workload: node fleet up front plus churn,
+    steady task arrivals/removals/usage samples sized to the cell."""
+    r = np.random.default_rng(seed)
+    evs = [[] for _ in range(n_windows)]
+    for m in range(cfg.max_nodes):
+        evs[0].append(HostEvent(0, EventKind.ADD_NODE, m,
+                                a=(_grid(r, 96, 256), _grid(r, 96, 256),
+                                   _grid(r, 96, 256))))
+    per_window = max(cfg.max_events_per_window // 4, 32)
+    slots = cfg.max_tasks
+    live = []
+    next_slot = 0
+    for w in range(1, n_windows):
+        for _ in range(per_window):
+            kind = r.random()
+            if kind < 0.55 or not live:
+                s = next_slot % slots
+                next_slot += 1
+                live.append(s)
+                evs[w].append(HostEvent(
+                    1, EventKind.ADD_TASK, s,
+                    a=(_grid(r, 1, 24), _grid(r, 1, 24), _grid(r, 0, 8)),
+                    prio=int(r.integers(0, 12))))
+            elif kind < 0.75:
+                s = live.pop(int(r.integers(0, len(live))))
+                reason = float(REMOVE_REASON_EVICT) if r.random() < .2 else 0.
+                evs[w].append(HostEvent(2, EventKind.REMOVE_TASK, s,
+                                        a=(reason, 0, 0)))
+            elif kind < 0.95:
+                s = live[int(r.integers(0, len(live)))]
+                evs[w].append(HostEvent(
+                    2, EventKind.UPDATE_TASK_USED, s,
+                    u=tuple(_grid(r, 0, 16) for _ in range(8))))
+            else:
+                m = int(r.integers(0, cfg.max_nodes))
+                evs[w].append(HostEvent(0, EventKind.UPDATE_NODE_RESOURCES, m,
+                                        a=(_grid(r, 64, 256),
+                                           _grid(r, 64, 256),
+                                           _grid(r, 64, 256))))
+    return [pack_window(cfg, e, i) for i, e in enumerate(evs)]
+
+
+def _wall(fn, reps):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_single(cfg_inc, cfg_full, windows, reps):
+    """Single-lane scan: windows/sec per mode + cross-mode equivalence."""
+    W = windows.kind.shape[0]
+    finals = {}
+    out = {}
+    for name, cfg in (("incremental", cfg_inc), ("full", cfg_full)):
+        def run():
+            s, st = eng.run_windows_jit(init_state(cfg), windows, cfg,
+                                        "greedy", 0)
+            jax.block_until_ready(s)
+            return s, st
+        s, st = run()                       # compile + equivalence capture
+        finals[name] = (jax.tree.map(np.asarray, s),
+                        jax.tree.map(np.asarray, st))
+        out[f"windows_per_sec_{name}"] = W / _wall(lambda: run(), reps)
+    out["speedup"] = (out["windows_per_sec_incremental"]
+                      / out["windows_per_sec_full"])
+    si, sf = finals["incremental"][0], finals["full"][0]
+    out["placements_bitexact"] = bool(
+        np.array_equal(si.task_node, sf.task_node)
+        and np.array_equal(si.task_state, sf.task_state))
+    out["accounting_allclose"] = bool(
+        np.allclose(si.node_reserved, sf.node_reserved, atol=1e-4)
+        and np.allclose(si.node_used, sf.node_used, atol=1e-4))
+    out["stats_allclose"] = bool(all(
+        np.allclose(finals["incremental"][1][k], finals["full"][1][k],
+                    atol=1e-4)
+        for k in finals["full"][1]))
+    return out
+
+
+def bench_fleet(cfg_inc, cfg_full, windows, reps, specs):
+    """Vmapped fleet at B=8, mixed schedulers; has_storm derived from the
+    specs exactly as ScenarioFleet does."""
+    W = windows.kind.shape[0]
+    has_storm = any(s.evict_storm_frac > 0.0 for s in specs)
+    knobs, sched_names = build_knobs(specs)
+    finals = {}
+    out = {"has_storm": has_storm}
+    for name, cfg in (("incremental", cfg_inc), ("full", cfg_full)):
+        def run():
+            s, st = batch_mod.run_scenarios_jit(
+                batch_mod.init_batched_state(cfg, FLEET_B), windows, knobs,
+                cfg, sched_names, 0, has_storm=has_storm)
+            jax.block_until_ready(s)
+            return s, st
+        s, st = run()
+        finals[name] = jax.tree.map(np.asarray, s)
+        out[f"windows_per_sec_{name}"] = W / _wall(lambda: run(), reps)
+    out["speedup"] = (out["windows_per_sec_incremental"]
+                      / out["windows_per_sec_full"])
+    si, sf = finals["incremental"], finals["full"]
+    out["placements_bitexact"] = bool(
+        np.array_equal(si.task_node, sf.task_node)
+        and np.array_equal(si.task_state, sf.task_state))
+    out["accounting_allclose"] = bool(
+        np.allclose(si.node_reserved, sf.node_reserved, atol=1e-4)
+        and np.allclose(si.node_used, sf.node_used, atol=1e-4))
+    return out
+
+
+def bench_staging(cfg, window_list, reps):
+    """Host-side restacking: preallocated staging ring vs np.stack."""
+    batch = 32
+    groups = [window_list[i:i + batch]
+              for i in range(0, len(window_list) - batch + 1, batch)]
+    if not groups:
+        groups = [window_list]
+        batch = len(window_list)
+    pool = pipe._StagingPool(window_list[0], batch)
+
+    def with_stack():
+        for g in groups:
+            stack_windows(g)
+
+    def with_pool():
+        for g in groups:
+            pool.stack(g)
+
+    with_stack(), with_pool()
+    t_stack = _wall(with_stack, reps)
+    t_pool = _wall(with_pool, reps)
+    return {"np_stack_ms_per_batch": t_stack * 1e3 / len(groups),
+            "staging_ring_ms_per_batch": t_pool * 1e3 / len(groups),
+            "speedup": t_stack / max(t_pool, 1e-12)}
+
+
+def bench_driver(cfg, window_list, reps):
+    """End-to-end Simulation driver (prefetch thread + async stats)."""
+    W = len(window_list)
+
+    def run():
+        sim = pipe.Simulation(cfg, iter(window_list), batch_windows=32)
+        sim.run()
+        return sim
+
+    run()
+    return {"windows_per_sec_e2e": W / _wall(lambda: run(), reps),
+            "async_stats": True}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for the CI perf-smoke job")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if speedups regress >20%% vs the committed "
+                         "baseline (or equivalence breaks)")
+    ap.add_argument("--windows", type=int, default=None)
+    ap.add_argument("--out", default=str(JSON_PATH))
+    args = ap.parse_args(argv)
+
+    cfg_inc = make_cfg(args.quick)
+    cfg_full = dataclasses.replace(cfg_inc, incremental_accounting=False)
+    W = args.windows or (64 if args.quick else 128)
+    reps = 3
+
+    # snapshot the committed baseline BEFORE (possibly) overwriting it
+    baseline = None
+    if args.check:
+        try:
+            baseline = json.loads(JSON_PATH.read_text())
+        except FileNotFoundError:
+            pass
+
+    window_list = build_windows(cfg_inc, W)
+    windows = jax.tree.map(jnp.asarray, stack_windows(window_list))
+
+    result = {
+        "meta": {"backend": jax.default_backend(),
+                 "quick": args.quick, "windows": W,
+                 "max_nodes": cfg_inc.max_nodes,
+                 "max_tasks": cfg_inc.max_tasks,
+                 "sched_batch": cfg_inc.sched_batch,
+                 "fleet_B": FLEET_B},
+        "single": bench_single(cfg_inc, cfg_full, windows, reps),
+        "fleet_B8": bench_fleet(cfg_inc, cfg_full, windows, reps,
+                                FLEET_SPECS),
+        "fleet_B8_storm": bench_fleet(cfg_inc, cfg_full, windows, reps,
+                                      STORM_SPECS),
+        "staging": bench_staging(cfg_inc, window_list, reps),
+        "driver": bench_driver(cfg_inc, window_list, reps),
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    for sec in ("single", "fleet_B8", "fleet_B8_storm"):
+        r = result[sec]
+        print(f"{sec}: {r['windows_per_sec_incremental']:.1f} w/s "
+              f"incremental vs {r['windows_per_sec_full']:.1f} w/s full "
+              f"-> {r['speedup']:.2f}x  (bitexact={r['placements_bitexact']}"
+              f", allclose={r['accounting_allclose']})")
+    print(f"staging: {result['staging']['speedup']:.2f}x vs np.stack; "
+          f"driver e2e {result['driver']['windows_per_sec_e2e']:.1f} w/s; "
+          f"-> {args.out}")
+
+    ok = True
+    for sec in ("single", "fleet_B8", "fleet_B8_storm"):
+        if not (result[sec]["placements_bitexact"]
+                and result[sec]["accounting_allclose"]):
+            print(f"FAIL: {sec} equivalence broken")
+            ok = False
+    if args.check:
+        if baseline is None:
+            print(f"note: no committed baseline at {JSON_PATH}; "
+                  "skipping regression gate")
+        elif baseline.get("meta", {}).get("quick") != args.quick:
+            print("note: committed baseline was measured at different "
+                  "shapes (quick mismatch); skipping regression gate")
+        else:
+            for sec in ("single", "fleet_B8"):
+                got = result[sec]["speedup"]
+                want = baseline[sec]["speedup"]
+                if got < 0.8 * want:
+                    print(f"FAIL: {sec} speedup {got:.2f}x regressed >20% "
+                          f"vs committed {want:.2f}x")
+                    ok = False
+                else:
+                    print(f"check {sec}: {got:.2f}x vs committed "
+                          f"{want:.2f}x OK")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

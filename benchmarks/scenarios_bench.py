@@ -131,12 +131,17 @@ def run(csv_rows):
             stack_windows(list(GCDParser(CFG, d).packed_windows(
                 WINDOWS, start_us=start))))
         knobs, sched_names = build_knobs(specs)
-        state_b = batch_mod.init_batched_state(CFG, B)
         state_1 = init_state(CFG)
 
+        # run_scenarios_jit donates its state argument, so each call needs
+        # its own — pre-built OUTSIDE the timed region to keep the batched
+        # column comparable to the sequential one (which reuses state_1)
+        fresh_states = [batch_mod.init_batched_state(CFG, B)
+                        for _ in range(REPEATS + 1)]
+
         def dev_batched():
-            s, _ = batch_mod.run_scenarios_jit(state_b, windows, knobs, CFG,
-                                               sched_names)
+            s, _ = batch_mod.run_scenarios_jit(
+                fresh_states.pop(), windows, knobs, CFG, sched_names)
             jax.block_until_ready(s)
 
         seq_fns = {n: jax.jit(lambda s, w, n=n: eng.run_windows(

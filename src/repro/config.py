@@ -281,6 +281,24 @@ class SimConfig:
     sched_batch: int = 1_024          # max pending tasks considered per window
     seed: int = 0
     use_kernels: bool = False         # Pallas interpret kernels (CPU) vs jnp ref
+    incremental_accounting: bool = True
+                                      # maintain node_reserved/node_used by
+                                      # per-event deltas (O(events) per window)
+                                      # instead of full segment-sum recomputes
+                                      # (O(max_tasks), three times per window).
+                                      # False restores the pre-delta full
+                                      # recompute path — kept for the
+                                      # equivalence suite and as the fallback
+                                      # if a trace violates the pipeline's
+                                      # one-update-per-(slot, field-group)
+                                      # window guarantee
+    resync_windows: int = 64          # full segment-sum resync cadence under
+                                      # incremental accounting: the drivers
+                                      # recompute both tallies from the task
+                                      # table every ~resync_windows windows
+                                      # (rounded up to a batch boundary),
+                                      # bounding float accumulation drift.
+                                      # 0 disables the resync
     trace_time_shift_us: int = 600_000_000  # GCD's 10-minute shift
     scenario_salt: int = 0x5DEECE66   # seeds the deterministic perturbation
                                       # hashes of the what-if scenario fleet
@@ -300,6 +318,8 @@ class SimConfig:
     def __post_init__(self):
         if self.inject_slots < 0 or self.inject_task_slots < 0:
             raise ValueError("inject_slots / inject_task_slots must be >= 0")
+        if self.resync_windows < 0:
+            raise ValueError("resync_windows must be >= 0 (0 disables)")
         if self.inject_slots >= self.max_events_per_window:
             raise ValueError(
                 f"inject_slots={self.inject_slots} leaves no event rows "

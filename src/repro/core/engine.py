@@ -3,13 +3,28 @@
 Every 5 sim-seconds (one *window*) AGOCS drains its parser buffers and applies
 the collected events to the shared state, then the scheduler(s) under test
 react. Here a window is one ``sim_window_step`` call: vectorised scatters
-apply the event batch, per-node accounting is recomputed with the
-segment-usage kernel, the pluggable scheduler places pending tasks via the
-constraint-match kernel, and a stats row is emitted.
+apply the event batch, per-node accounting is maintained, the pluggable
+scheduler places pending tasks via the constraint-match kernel, and a stats
+row is emitted.
 
 ``run_windows`` scans a stack of windows on-device; the host pipeline
 (core/pipeline.py) streams stacked windows in while the device computes —
 the JAX analogue of the paper's five buffering parser actors.
+
+Accounting (``node_reserved`` / ``node_used``) has two modes:
+
+* **incremental** (``cfg.incremental_accounting``, the default): every pass
+  that moves a task on or off a node also applies the matching per-node
+  delta — event application scatters O(events) corrections, invalid-placement
+  eviction zeroes exactly the dead/overcommitted node rows, and the
+  placement-commit kernel emits its on-chip reservation tally as an output.
+  The full segment-sum recompute becomes a periodic *resync*
+  (``cfg.resync_windows``, driven by core/pipeline.py) that bounds float
+  accumulation drift.
+* **full recompute** (``incremental_accounting=False``): the pre-delta
+  behaviour — three O(max_tasks) segment-sum recomputes per window — kept
+  for the equivalence suite and traces that break the pipeline's
+  one-update-per-(slot, field-group) window guarantee.
 
 Event-application order inside a window (matches the paper's timestamp
 linearisation; the host pipeline guarantees at most one update per (slot,
@@ -19,7 +34,7 @@ field-group) per window):
   3. task adds + requirement/constraint updates,
   4. usage samples,
   5. node-removal evictions (running tasks on dead nodes -> back to pending),
-  6. accounting recompute (segment sums),
+  6. accounting (delta-maintained, or recomputed in full mode),
   7. scheduling (any ``repro.sched`` registry scheduler),
   8. stats.
 """
@@ -44,8 +59,17 @@ def _masked_slot(mask: jax.Array, slot: jax.Array, overflow: int) -> jax.Array:
     return jnp.where(mask, slot, overflow)
 
 
+def _scatter_delta(acc: jax.Array, node: jax.Array, mask: jax.Array,
+                   vals: jax.Array) -> jax.Array:
+    """acc (N, R) += vals (E, R) at ``node`` where ``mask``; other rows drop."""
+    return acc.at[_masked_slot(mask, node, acc.shape[0])].add(
+        jnp.where(mask[:, None], vals, 0.0), mode="drop")
+
+
 def apply_node_events(state: SimState, w: EventWindow, cfg: SimConfig
                       ) -> SimState:
+    # node events never move accounting: a capacity change or removal leaves
+    # placed tasks' contributions in the tallies until evict_invalid reacts
     N = cfg.max_nodes
     kind = w.kind
 
@@ -77,10 +101,36 @@ def apply_task_events(state: SimState, w: EventWindow, cfg: SimConfig
     T = cfg.max_tasks
     kind = w.kind
 
-    # --- removals first (a slot can be freed and re-used next window) ---
     rem = kind == EventKind.REMOVE_TASK
+    add = kind == EventKind.ADD_TASK
+    upd = kind == EventKind.UPDATE_TASK_REQUIRED
+    ucon = kind == EventKind.UPDATE_TASK_CONSTRAINTS
+    use = kind == EventKind.UPDATE_TASK_USED
+
+    # pre-mutation gathers (removal counters + incremental deltas)
+    old_state_at = state.task_state[w.slot]
+    live = old_state_at != TASK_EMPTY
+
+    node_reserved, node_used = state.node_reserved, state.node_used
+    if cfg.incremental_accounting:
+        ucols = jnp.array(stats_mod.ACCOUNTED_USAGE_COLS)
+        was_running = old_state_at == TASK_RUNNING
+        ev_node = state.task_node[w.slot]                      # (E,)
+        old_req = state.task_req[w.slot]                       # (E, R)
+        old_used = state.task_usage[w.slot][:, ucols]          # (E, R)
+        # lifecycle rows that end a RUNNING placement give back req + usage
+        # (REMOVE, or an ADD reusing a slot that is still running — e.g. the
+        # injection pool recycling before its synthesised REMOVE fired)
+        gone = (rem | add) & was_running
+        node_reserved = _scatter_delta(node_reserved, ev_node, gone, -old_req)
+        node_used = _scatter_delta(node_used, ev_node, gone, -old_used)
+        # requirement updates on running tasks move the reservation
+        moved = upd & was_running
+        node_reserved = _scatter_delta(node_reserved, ev_node, moved,
+                                       w.a - old_req)
+
+    # --- removals first (a slot can be freed and re-used next window) ---
     rem_rows = _masked_slot(rem, w.slot, T)
-    live = state.task_state[w.slot] != TASK_EMPTY
     evicted = rem & live & (w.a[:, 0] == float(REMOVE_REASON_EVICT))
     n_evict = jnp.sum(evicted).astype(jnp.int32)
     n_rem = jnp.sum(rem & live).astype(jnp.int32) - n_evict
@@ -88,10 +138,6 @@ def apply_task_events(state: SimState, w: EventWindow, cfg: SimConfig
     task_node = state.task_node.at[rem_rows].set(-1, mode="drop")
 
     # --- adds / updates ---
-    add = kind == EventKind.ADD_TASK
-    upd = kind == EventKind.UPDATE_TASK_REQUIRED
-    ucon = kind == EventKind.UPDATE_TASK_CONSTRAINTS
-
     task_state = task_state.at[_masked_slot(add, w.slot, T)].set(
         TASK_PENDING, mode="drop")
     task_node = task_node.at[_masked_slot(add, w.slot, T)].set(-1, mode="drop")
@@ -105,7 +151,14 @@ def apply_task_events(state: SimState, w: EventWindow, cfg: SimConfig
         _masked_slot(add | ucon, w.slot, T)].set(w.constraints, mode="drop")
 
     # --- usage samples ---
-    use = kind == EventKind.UPDATE_TASK_USED
+    if cfg.incremental_accounting:
+        # a sample moves node_used only if the task still runs after the
+        # lifecycle rows above (its own REMOVE in this window wins: the full
+        # recompute would see an EMPTY slot, and `gone` already debited the
+        # whole old contribution)
+        samp = use & (task_state[w.slot] == TASK_RUNNING)
+        node_used = _scatter_delta(node_used, ev_node, samp,
+                                   w.u[:, ucols] - old_used)
     task_usage = state.task_usage.at[_masked_slot(use, w.slot, T)].set(
         w.u, mode="drop")
 
@@ -113,6 +166,7 @@ def apply_task_events(state: SimState, w: EventWindow, cfg: SimConfig
         task_state=task_state, task_node=task_node, task_req=task_req,
         task_prio=task_prio, task_job=task_job,
         task_constraints=task_constraints, task_usage=task_usage,
+        node_reserved=node_reserved, node_used=node_used,
         completions=state.completions + n_rem,
         evictions=state.evictions + n_evict)
 
@@ -125,31 +179,53 @@ def evict_invalid(state: SimState, cfg: SimConfig) -> SimState:
       (GCD machine updates; Google's scheduler would evict — so do we).
 
     Evicted tasks go back to pending, mirroring GCD's EVICT-then-clone cycle.
-    Requires node_reserved to be current (call recompute_accounting first).
+    Requires node_reserved to be current (incremental mode maintains it;
+    full mode must recompute_accounting first). Under incremental accounting
+    the per-node tallies are corrected here too: every running task on a
+    dead/overcommitted node is evicted, so those node rows drop to exactly
+    zero and all other rows are untouched — an O(max_nodes) select instead
+    of a segment-sum pass.
     """
     node_idx = jnp.maximum(state.task_node, 0)
     dead = ~state.node_active[node_idx]
-    over = (state.node_reserved > state.node_total + 1e-6).any(axis=1)
-    bad = (state.task_state == TASK_RUNNING) & (dead | over[node_idx])
+    over_nodes = (state.node_reserved > state.node_total + 1e-6).any(axis=1)
+    bad = (state.task_state == TASK_RUNNING) & (dead | over_nodes[node_idx])
     n_evict = jnp.sum(bad).astype(jnp.int32)
-    return state._replace(
+    state = state._replace(
         task_state=jnp.where(bad, TASK_PENDING, state.task_state),
         task_node=jnp.where(bad, -1, state.task_node),
         evictions=state.evictions + n_evict)
+    if cfg.incremental_accounting:
+        bad_node = (~state.node_active | over_nodes)[:, None]
+        state = state._replace(
+            node_reserved=jnp.where(bad_node, 0.0, state.node_reserved),
+            node_used=jnp.where(bad_node, 0.0, state.node_used))
+    return state
 
 
 def recompute_accounting(state: SimState, cfg: SimConfig) -> SimState:
-    """node_reserved / node_used from the task table (segment-usage kernel)."""
-    from repro.core.stats import U_CPU, U_CANON_MEM, U_DISK_SPACE
+    """node_reserved / node_used from the task table (segment-usage kernel).
+
+    The whole inner loop in full-recompute mode; the periodic *resync* path
+    (and the oracle the equivalence tests compare against) under incremental
+    accounting.
+    """
     running = state.task_state == TASK_RUNNING
     reserved = segment_usage(state.task_node, state.task_req, running,
                              cfg.max_nodes, use_kernel=cfg.use_kernels)
     # align usage columns with the (cpu, memory, disk) resource axes
-    used_cols = state.task_usage[:, jnp.array([U_CPU, U_CANON_MEM,
-                                               U_DISK_SPACE])]
+    used_cols = state.task_usage[:, jnp.array(stats_mod.ACCOUNTED_USAGE_COLS)]
     used = segment_usage(state.task_node, used_cols, running,
                          cfg.max_nodes, use_kernel=cfg.use_kernels)
     return state._replace(node_reserved=reserved, node_used=used)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
+def resync_accounting_jit(state: SimState, cfg: SimConfig) -> SimState:
+    """Donating jit of the full recompute — the drivers' periodic drift
+    resync under incremental accounting (see ``SimConfig.resync_windows``)."""
+    return recompute_accounting(state, cfg)
 
 
 def make_window_step(cfg: SimConfig, scheduler_fn: Callable
@@ -161,11 +237,14 @@ def make_window_step(cfg: SimConfig, scheduler_fn: Callable
                         ) -> Tuple[SimState, Dict[str, jax.Array]]:
         state = apply_node_events(state, w, cfg)
         state = apply_task_events(state, w, cfg)
-        state = recompute_accounting(state, cfg)
+        if not cfg.incremental_accounting:
+            state = recompute_accounting(state, cfg)
         state = evict_invalid(state, cfg)
-        state = recompute_accounting(state, cfg)
+        if not cfg.incremental_accounting:
+            state = recompute_accounting(state, cfg)
         state = scheduler_fn(state, cfg, rng)
-        state = recompute_accounting(state, cfg)
+        if not cfg.incremental_accounting:
+            state = recompute_accounting(state, cfg)
         state = state._replace(window=state.window + 1)
         return state, stats_mod.window_stats(state, cfg)
 
@@ -187,9 +266,14 @@ def run_windows(state: SimState, windows: EventWindow, cfg: SimConfig,
     return jax.lax.scan(body, state, (windows, keys))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "scheduler_name"))
+@functools.partial(jax.jit, static_argnames=("cfg", "scheduler_name"),
+                   donate_argnames=("state",))
 def run_windows_jit(state: SimState, windows: EventWindow, cfg: SimConfig,
                     scheduler_name: str, seed: int = 0):
+    """Donating entry point: the (max_tasks, ...) task tables of ``state``
+    are reused for the output instead of double-buffered between batches —
+    callers must thread the returned state and not touch the argument again
+    (the drive loop in core/pipeline.py does exactly that)."""
     from repro.sched import get_scheduler
     return run_windows(state, windows, cfg, get_scheduler(scheduler_name),
                        seed)

@@ -7,15 +7,31 @@ tensorised on worker threads into a bounded buffer *ahead of simulation time*
 device-batches of B windows, and handed to the jitted scan while the next
 batch is being parsed — double buffering ≈ Akka actors filling buffers while
 the WorkloadGenerator drains them.
+
+The pipeline is fully asynchronous end-to-end:
+
+* batches are staged into a preallocated buffer ring (no per-batch
+  ``np.stack`` allocations) and copied to the device *on the fill thread*
+  (``jnp.array(copy=True)`` — see ``WindowPrefetcher._put`` for why it must
+  not be ``device_put``), so host tensorisation + H2D transfer of batch k+1
+  overlap device compute of batch k;
+* the drive loop never materialises the per-batch stats pytree — rows stay
+  device-resident and dispatch runs ahead, bounded to
+  ``WindowedDriver.max_inflight_batches`` so a fast parser cannot pile up
+  unexecuted device work without limit; ``stats_frame()`` materialises
+  them lazily. Apart from that backpressure bound, the only host sync per
+  ``run()`` is the final ``block_until_ready``.
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import SimConfig
@@ -24,13 +40,48 @@ from repro.core.events import EventWindow, stack_windows
 from repro.core.state import SimState, init_state
 
 
+class _StagingPool:
+    """Ring of preallocated (W, ...) per-field staging buffers.
+
+    ``stack`` copies a batch of windows into the next ring slot — replacing
+    the per-batch ``np.stack`` allocations on the consumer-critical fill
+    path. Reuse is safe because every slot is copied to the device
+    (``jnp.array(copy=True)`` in ``WindowPrefetcher._put``) before the ring
+    wraps around; the raw numpy buffers are never passed into ``jit`` or
+    ``device_put``, both of which zero-copy alias 64-byte-aligned numpy
+    buffers on CPU and would let a later refill corrupt an in-flight batch
+    (regression-tested in tests/test_pipeline_async.py).
+    """
+
+    def __init__(self, proto: EventWindow, batch: int, slots: int = 4):
+        self.batch = batch
+        self._ring = [
+            EventWindow(*[np.empty((batch,) + np.shape(f),
+                                   np.asarray(f).dtype) for f in proto])
+            for _ in range(slots)]
+        self._i = 0
+
+    def stack(self, windows: List[EventWindow]) -> EventWindow:
+        if len(windows) != self.batch:        # short tail batch
+            return stack_windows(windows)
+        buf = self._ring[self._i]
+        self._i = (self._i + 1) % len(self._ring)
+        for j, w in enumerate(windows):
+            for dst, src in zip(buf, w):
+                dst[j] = src
+        return buf
+
+
 class WindowPrefetcher:
     """Bounded-buffer producer/consumer over packed EventWindows.
 
-    The source may yield single windows (stacked here into device batches of
+    The source may yield single windows (staged here into device batches of
     ``batch_windows``) or pre-stacked (W, ...) batches — e.g. straight from
-    ``core.precompile.replay_windows`` — which pass through untouched, so
-    pre-compiled replay skips the host-side restacking copy entirely.
+    ``core.precompile.replay_windows`` — which skip the staging copy. Either
+    way the fill thread finishes each batch with an owning device copy
+    (``jnp.array(copy=True)`` in ``_put`` — never ``device_put``, which
+    would alias the staging ring), so the consumer dequeues device-resident
+    tensors and the H2D transfer overlaps the simulation of earlier batches.
     """
 
     def __init__(self, cfg: SimConfig, window_iter: Iterator[EventWindow],
@@ -41,28 +92,59 @@ class WindowPrefetcher:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._src = window_iter
         self._done = object()
+        self._lock = threading.Lock()
+        self._events_in = 0       # produced into the buffer (fill thread)
+        self._events_out = 0      # consumed by the driver (main thread)
         self._thread = threading.Thread(target=self._fill, daemon=True)
-        self.events_buffered = 0
         self._thread.start()
+
+    @property
+    def events_buffered(self) -> int:
+        """Cumulative events tensorised into the buffer (guarded read — the
+        counter is written by the fill thread)."""
+        with self._lock:
+            return self._events_in
+
+    def buffer_occupancy(self) -> Dict[str, int]:
+        """Consistent snapshot of the producer/consumer ledger."""
+        with self._lock:
+            pending = self._events_in - self._events_out
+            return {"events_in_buffer": pending,
+                    "batches_in_buffer": self._q.qsize(),
+                    "events_parsed": self._events_in,
+                    "events_consumed": self._events_out}
+
+    def _put(self, item: EventWindow):
+        n = int(np.sum(np.asarray(item.n_valid)))
+        # jnp.array(copy=True), NOT device_put: on CPU, device_put (and raw
+        # jit inputs) zero-copy ALIAS any 64-byte-aligned numpy buffer, so a
+        # staging-ring slot could be rewritten under an in-flight batch. The
+        # explicit copy is the H2D transfer, done here on the fill thread so
+        # it overlaps device compute of earlier batches.
+        dev = jax.tree.map(lambda x: jnp.array(x, copy=True), item)
+        with self._lock:
+            self._events_in += n
+        self._q.put((dev, n))
 
     def _fill(self):
         batch: List[EventWindow] = []
+        pool: Optional[_StagingPool] = None
         try:
             for w in self._src:
                 if w.kind.ndim == 2:          # pre-stacked (W, E) batch
                     if batch:                 # keep arrival order
-                        self._q.put(stack_windows(batch))
+                        self._put(pool.stack(batch))
                         batch = []
-                    self.events_buffered += int(np.sum(w.n_valid))
-                    self._q.put(w)
+                    self._put(w)
                     continue
+                if pool is None:
+                    pool = _StagingPool(w, self.batch)
                 batch.append(w)
-                self.events_buffered += int(w.n_valid)
                 if len(batch) == self.batch:
-                    self._q.put(stack_windows(batch))
+                    self._put(pool.stack(batch))
                     batch = []
             if batch:
-                self._q.put(stack_windows(batch))
+                self._put(pool.stack(batch))
         finally:
             self._q.put(self._done)
 
@@ -71,7 +153,10 @@ class WindowPrefetcher:
             item = self._q.get()
             if item is self._done:
                 return
-            yield item
+            dev, n = item
+            with self._lock:
+                self._events_out += n
+            yield dev
 
 
 class WindowedDriver:
@@ -80,13 +165,24 @@ class WindowedDriver:
     Subclasses own ``self.state`` and implement ``_advance(batch, seed)``
     (consume one stacked window batch, update ``self.state``, return the
     stats pytree). Everything else — pause/resume, the per-batch seed
-    derivation, real-time pacing, stats accumulation — lives here once, so
-    the single-trajectory Simulation and the batched ScenarioFleet
-    (repro/scenarios/runner.py) cannot drift apart (the scenario fleet's
-    lane-0 bit-identity guarantee depends on sharing this exact loop).
+    derivation, real-time pacing, stats accumulation, the periodic
+    accounting resync — lives here once, so the single-trajectory
+    Simulation and the batched ScenarioFleet (repro/scenarios/runner.py)
+    cannot drift apart (the scenario fleet's lane-0 bit-identity guarantee
+    depends on sharing this exact loop).
+
+    The loop is sync-free in the steady state: ``_advance`` returns device
+    arrays (its jitted body dispatches asynchronously) and the stats rows
+    are appended without materialisation, so batch k+1's host work overlaps
+    batch k's device compute. Runahead is bounded: once more than
+    ``max_inflight_batches`` dispatches are outstanding the loop waits for
+    the oldest — without this a parser that outpaces the device would
+    accumulate unexecuted device programs (and their event tensors) for
+    the whole trace. The final ``block_until_ready`` drains the tail.
     """
 
     state: SimState
+    max_inflight_batches: int = 4
 
     def __init__(self, cfg: SimConfig, window_source: Iterator[EventWindow],
                  batch_windows: int = 32, seed: Optional[int] = None):
@@ -95,10 +191,17 @@ class WindowedDriver:
         self.seed = cfg.seed if seed is None else seed
         self.stats_rows: List[Dict[str, np.ndarray]] = []
         self.windows_done = 0
+        self.resyncs_done = 0
+        self._since_resync = 0
+        self._inflight: "collections.deque" = collections.deque()
         self._paused = threading.Event()
 
     def _advance(self, batch: EventWindow, seed: int):
         raise NotImplementedError
+
+    def _resync(self) -> SimState:
+        """Full accounting recompute (subclass hook; identity by default)."""
+        return self.state
 
     def pause(self):
         self._paused.set()
@@ -109,14 +212,24 @@ class WindowedDriver:
     def run(self, max_windows: Optional[int] = None,
             on_batch: Optional[Callable] = None) -> SimState:
         t_start = time.time()
+        resync_every = (self.cfg.resync_windows
+                        if self.cfg.incremental_accounting else 0)
         for batch in self.prefetcher:
             while self._paused.is_set():
                 time.sleep(0.01)
             W = batch.kind.shape[0]
-            stats = self._advance(jax.tree.map(np.asarray, batch),
-                                  self.seed + self.windows_done)
+            stats = self._advance(batch, self.seed + self.windows_done)
             self.windows_done += W
-            self.stats_rows.append(jax.tree.map(np.asarray, stats))
+            self.stats_rows.append(stats)
+            self._inflight.append(stats)
+            if len(self._inflight) > self.max_inflight_batches:
+                jax.block_until_ready(self._inflight.popleft())
+            if resync_every:
+                self._since_resync += W
+                if self._since_resync >= resync_every:
+                    self.state = self._resync()
+                    self.resyncs_done += 1
+                    self._since_resync = 0
             if on_batch is not None:
                 on_batch(self)
             if self.cfg.speed_factor > 0:
@@ -131,12 +244,20 @@ class WindowedDriver:
         return self.state
 
     def stats_frame(self) -> Dict[str, np.ndarray]:
-        """Concatenate per-batch stat rows into (total_windows, ...) arrays."""
+        """Concatenate per-batch stat rows into (total_windows, ...) arrays.
+
+        Materialisation point of the async stats stream: device rows are
+        pulled to host (and scalar rows normalised to length-1 vectors)
+        here, once, in place — so repeated calls don't re-transfer and the
+        drive loop itself never syncs on stats.
+        """
         if not self.stats_rows:
             return {}
+        for i, r in enumerate(self.stats_rows):
+            self.stats_rows[i] = {k: np.atleast_1d(np.asarray(v))
+                                  for k, v in r.items()}
         keys = self.stats_rows[0].keys()
-        return {k: np.concatenate([r[k] if np.ndim(r[k]) else r[k][None]
-                                   for r in self.stats_rows])
+        return {k: np.concatenate([r[k] for r in self.stats_rows])
                 for k in keys}
 
 
@@ -160,3 +281,6 @@ class Simulation(WindowedDriver):
         self.state, stats = engine_mod.run_windows_jit(
             self.state, batch, self.cfg, self.scheduler, seed)
         return stats
+
+    def _resync(self):
+        return engine_mod.resync_accounting_jit(self.state, self.cfg)

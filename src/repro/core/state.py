@@ -25,6 +25,12 @@ class SimState(NamedTuple):
     node_active: jax.Array      # (N,)   bool
     node_total: jax.Array       # (N,R)  f32 capacity
     node_attrs: jax.Array       # (N,K)  i32 attribute values (0 = unset)
+    # accounting tallies: under cfg.incremental_accounting (default) these
+    # are *maintained* by per-event deltas through every pass that moves a
+    # task on/off a node (engine, commit finaliser, scenario perturbations)
+    # and periodically resynced from the task table (cfg.resync_windows);
+    # with incremental_accounting=False they are recomputed in full by
+    # segment-sums three times per window (the pre-delta path)
     node_reserved: jax.Array    # (N,R)  f32 sum of requested res of placed tasks
     node_used: jax.Array        # (N,R)  f32 sum of actual usage of placed tasks
     # --- tasks (slotted table) ---

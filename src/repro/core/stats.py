@@ -23,6 +23,11 @@ U_DISK_IO, U_DISK_SPACE, U_CPI, U_MAI = 4, 5, 6, 7
 USAGE_NAMES = ("cpu_rate", "canonical_mem", "assigned_mem", "page_cache",
                "disk_io_time", "disk_space", "cpi", "mai")
 
+# usage columns aligned with the (cpu, memory, disk) resource axes — the
+# slice of task_usage that flows into node_used (full recomputes and the
+# engine's incremental deltas must agree on this, so it lives here once)
+ACCOUNTED_USAGE_COLS = (U_CPU, U_CANON_MEM, U_DISK_SPACE)
+
 
 def window_stats(state: SimState, cfg: SimConfig) -> Dict[str, jax.Array]:
     running = state.task_state == TASK_RUNNING
@@ -57,12 +62,12 @@ def window_stats(state: SimState, cfg: SimConfig) -> Dict[str, jax.Array]:
                / jnp.maximum(active.sum(), 1))
 
     # per-priority-class population (GCD priorities 0-11; Table II rows
-    # 'Local Scheduler (Priority Class)' / 'Jobs and Tasks Priority')
+    # 'Local Scheduler (Priority Class)' / 'Jobs and Tasks Priority') —
+    # one fused scatter over the task table, split into the two columns
     prio = jnp.clip(state.task_prio, 0, 11)
-    run_by_prio = jnp.zeros((12,), jnp.int32).at[prio].add(
-        running.astype(jnp.int32))
-    pend_by_prio = jnp.zeros((12,), jnp.int32).at[prio].add(
-        pending.astype(jnp.int32))
+    by_prio = jnp.zeros((12, 2), jnp.int32).at[prio].add(
+        jnp.stack([running, pending], axis=1).astype(jnp.int32))
+    run_by_prio, pend_by_prio = by_prio[:, 0], by_prio[:, 1]
 
     return {
         "n_nodes": active.sum().astype(jnp.int32),

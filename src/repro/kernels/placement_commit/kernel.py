@@ -114,8 +114,10 @@ def placement_commit_pallas(pref, req, ok, valid, total, denom, reserved0,
                             tile_p: int = 128, interpret: bool = True):
     """Batched commit over ``n_lanes`` scenario lanes (1 for the
     single-trajectory engine). Each operand's leading lane axis is either
-    ``n_lanes`` or 1 (lane-shared — kept un-copied). Returns node_of
-    (n_lanes, P) i32."""
+    ``n_lanes`` or 1 (lane-shared — kept un-copied). Returns
+    (node_of (n_lanes, P) i32, reserved (n_lanes, N, R) f32) — the final
+    VMEM-resident tally is emitted rather than discarded, so incremental
+    accounting can adopt it as the post-commit node_reserved."""
     P, N = pref.shape[1], pref.shape[2]
     R = req.shape[2]
     assert P % tile_p == 0, (P, tile_p)
@@ -131,7 +133,7 @@ def placement_commit_pallas(pref, req, ok, valid, total, denom, reserved0,
     def node_spec(x):
         return pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim)
 
-    node_of, _ = pl.pallas_call(
+    node_of, reserved = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -154,4 +156,4 @@ def placement_commit_pallas(pref, req, ok, valid, total, denom, reserved0,
         ),
         interpret=interpret,
     )(pref, req, ok, valid, total, denom, reserved0, dyn)
-    return node_of
+    return node_of, reserved

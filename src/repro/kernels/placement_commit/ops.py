@@ -41,7 +41,7 @@ def _make_commit(mode: str, tile_p: Optional[int], tile_n: int,
         Pp = ((P + tp - 1) // tp) * tp
         tn = min(tile_n, N)
         Np = ((N + tn - 1) // tn) * tn
-        node_of = placement_commit_pallas(
+        node_of, reserved = placement_commit_pallas(
             _pad_to(_pad_to(pref, Pp, 1), Np, 2),
             _pad_to(req, Pp, 1),
             _pad_to(_pad_to(ok, Pp, 1), Np, 2),
@@ -50,19 +50,20 @@ def _make_commit(mode: str, tile_p: Optional[int], tile_n: int,
             _pad_to(denom, Np, 1, fill=1.0),   # keep the re-score finite
             _pad_to(res0, Np, 1),
             dyn, n_lanes=n_lanes, mode=mode, tile_p=tp, interpret=interpret)
-        return node_of[:, :P]
+        return node_of[:, :P], reserved[:, :N]
 
     @custom_vmap
     def commit(pref, req, ok, valid, total, denom, res0, dyn):
         args = (pref, req, ok, valid, total, denom, res0, dyn)
-        return call_batched(1, *(x[None] for x in args))[0]
+        node_of, reserved = call_batched(1, *(x[None] for x in args))
+        return node_of[0], reserved[0]
 
     @commit.def_vmap
     def _batched_rule(axis_size, in_batched, *args):
         # unbatched (lane-shared) operands keep a size-1 lane axis — the
         # kernel broadcasts them instead of materialising B copies
         lanes = [x if b else x[None] for x, b in zip(args, in_batched)]
-        return call_batched(axis_size, *lanes), True
+        return call_batched(axis_size, *lanes), (True, True)
 
     return commit
 
@@ -70,13 +71,18 @@ def _make_commit(mode: str, tile_p: Optional[int], tile_n: int,
 def placement_commit(pref, req, base_ok, valid, total, denom, reserved0,
                      dynamic_bestfit=False, *, use_kernel: bool = False,
                      interpret: bool = True, tile_p: Optional[int] = None,
-                     tile_n: int = 128) -> jax.Array:
+                     tile_n: int = 128, return_tally: bool = False):
     """Sequential capacity-checked assignment in priority (row) order.
 
     pref (P,N) f32 preference scores, req (P,R) f32 requests, base_ok (P,N)
     bool feasibility, valid (P,) bool, total (N,R) f32 with inactive nodes
     folded to -1, denom (N,R) f32 best-fit normaliser, reserved0 (N,R) f32
-    starting tally -> node_of (P,) i32 (-1 = not placed). Bit-identical
+    starting tally -> node_of (P,) i32 (-1 = not placed); with
+    ``return_tally=True`` -> (node_of, reserved (N,R) f32), where reserved
+    is the scan's final reservation tally (reserved0 + every placed
+    request) — the kernel holds it resident across grid steps anyway, and
+    incremental accounting (engine/sched) adopts it as the post-commit
+    node_reserved instead of re-deriving it with a segment-sum. Bit-identical
     between the Pallas kernel (TPU target; interpret=True on CPU) and the
     pure-jnp reference — the engine invariant (no overcommit) is enforced by
     both. ``dynamic_bestfit`` may be a traced bool scalar (per-lane scheduler
@@ -97,15 +103,15 @@ def placement_commit(pref, req, base_ok, valid, total, denom, reserved0,
     per-step pref block comfortably inside VMEM at cell-A node counts).
     """
     if not use_kernel:
-        return placement_commit_ref(pref, req, base_ok, valid, total, denom,
-                                    reserved0, dynamic_bestfit)
-
-    if isinstance(dynamic_bestfit, jax.Array):
-        mode = "both"
-        dyn = dynamic_bestfit.astype(jnp.int32).reshape(1)
+        out = placement_commit_ref(pref, req, base_ok, valid, total, denom,
+                                   reserved0, dynamic_bestfit)
     else:
-        mode = "dynamic" if dynamic_bestfit else "static"
-        dyn = jnp.full((1,), int(bool(dynamic_bestfit)), jnp.int32)
-
-    commit = _make_commit(mode, tile_p, tile_n, interpret)
-    return commit(pref, req, base_ok, valid, total, denom, reserved0, dyn)
+        if isinstance(dynamic_bestfit, jax.Array):
+            mode = "both"
+            dyn = dynamic_bestfit.astype(jnp.int32).reshape(1)
+        else:
+            mode = "dynamic" if dynamic_bestfit else "static"
+            dyn = jnp.full((1,), int(bool(dynamic_bestfit)), jnp.int32)
+        commit = _make_commit(mode, tile_p, tile_n, interpret)
+        out = commit(pref, req, base_ok, valid, total, denom, reserved0, dyn)
+    return out if return_tally else out[0]

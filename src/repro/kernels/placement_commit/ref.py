@@ -19,10 +19,12 @@ NEG = -jnp.inf
 def placement_commit_ref(pref: jax.Array, req: jax.Array, base_ok: jax.Array,
                          valid: jax.Array, total: jax.Array,
                          denom: jax.Array, reserved0: jax.Array,
-                         dynamic_bestfit=False) -> jax.Array:
+                         dynamic_bestfit=False):
     """pref (P,N) f32, req (P,R) f32, base_ok (P,N) bool, valid (P,) bool,
     total (N,R) f32 (inactive nodes folded to -1), denom (N,R) f32,
-    reserved0 (N,R) f32 -> node_of (P,) i32 (-1 = not placed).
+    reserved0 (N,R) f32 -> (node_of (P,) i32 (-1 = not placed),
+    reserved (N,R) f32 — the final tally, reserved0 + every placed request,
+    which incremental accounting adopts as the post-commit node_reserved).
 
     dynamic_bestfit: recompute best-fit scores against the running
     reservation tally (true best-fit-decreasing) instead of the static pref.
@@ -53,5 +55,5 @@ def placement_commit_ref(pref: jax.Array, req: jax.Array, base_ok: jax.Array,
         return reserved, node_of
 
     node_of0 = jnp.full((P,), -1, jnp.int32)
-    _, node_of = jax.lax.fori_loop(0, P, body, (reserved0, node_of0))
-    return node_of
+    reserved, node_of = jax.lax.fori_loop(0, P, body, (reserved0, node_of0))
+    return node_of, reserved

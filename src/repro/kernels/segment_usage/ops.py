@@ -1,4 +1,10 @@
-"""jit'd wrapper for the segment-usage kernel: masking, padding, dispatch."""
+"""jit'd wrapper for the segment-usage kernel: masking, padding, dispatch.
+
+Under incremental accounting (``SimConfig.incremental_accounting``, the
+default) this full O(max_tasks) pass is no longer the engine's inner loop:
+it serves the periodic drift *resync* (``engine.resync_accounting_jit``),
+the full-recompute equivalence path, and masked-subset debits (the scenario
+fleet's eviction storm)."""
 from __future__ import annotations
 
 import functools

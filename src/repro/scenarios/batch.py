@@ -87,7 +87,8 @@ def init_batched_state(cfg: SimConfig, n_scenarios: int,
     return shard_over_fleet(batched, mesh)
 
 
-def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
+def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
+                       has_storm: bool = True):
     """Single-scenario (unbatched) step; vmap adds the scenario axis.
 
     Scheduler dispatch exploits the shared structure of repro.sched:
@@ -99,6 +100,12 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
     branches thin matters). The proposal table comes from the scheduler
     registry, so lanes may name plugins registered via
     ``repro.sched.register_scheduler``.
+
+    ``has_storm=False`` (a *static* promise from the runner that no lane
+    sets ``evict_storm_frac > 0``) drops the storm pass from the compiled
+    program entirely — at storm_frac == 0 it is a bitwise identity, but it
+    still costs an O(max_tasks) hash sweep per lane per window (plus, under
+    incremental accounting, two masked segment-sum debit passes).
     """
     proposers = tuple(PROPOSERS[n] for n in scheduler_names)
     dyn_table = jnp.asarray([DYNAMIC_BESTFIT[n] for n in scheduler_names])
@@ -127,14 +134,18 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
             injected = jnp.int32(0)
         state = eng.apply_node_events(state, w, cfg)
         state = eng.apply_task_events(state, w, cfg)
-        state = eng.recompute_accounting(state, cfg)
+        if not cfg.incremental_accounting:
+            state = eng.recompute_accounting(state, cfg)
         state = eng.evict_invalid(state, cfg)
-        state = perturb.storm_evict(state, knobs, cfg)
+        if has_storm:
+            state = perturb.storm_evict(state, knobs, cfg)
         if cfg.inject_slots:
             state = perturb.expire_injected(state, knobs, cfg)
-        state = eng.recompute_accounting(state, cfg)
+        if not cfg.incremental_accounting:
+            state = eng.recompute_accounting(state, cfg)
         state = dispatch(state, rng, knobs.sched_idx)
-        state = eng.recompute_accounting(state, cfg)
+        if not cfg.incremental_accounting:
+            state = eng.recompute_accounting(state, cfg)
         state = state._replace(window=state.window + 1)
         stats = stats_mod.window_stats(state, cfg)
         stats["injected_arrivals"] = injected
@@ -145,7 +156,8 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...]):
 
 def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
                   cfg: SimConfig, scheduler_names: Tuple[str, ...],
-                  seed: int = 0) -> Tuple[SimState, Dict[str, jax.Array]]:
+                  seed: int = 0, has_storm: bool = True
+                  ) -> Tuple[SimState, Dict[str, jax.Array]]:
     """Scan the vmapped step over stacked windows.
 
     state: (B, ...) stacked SimState; windows: (W, ...) stacked EventWindow
@@ -153,9 +165,10 @@ def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
     Returns the advanced (B, ...) state and a stats dict of (W, B, ...)
     arrays. RNG keys are split exactly as in ``engine.run_windows`` and
     shared across scenarios (common random numbers — the right thing for
-    paired what-if comparisons).
+    paired what-if comparisons). ``has_storm=False`` statically drops the
+    eviction-storm pass (only valid when every lane's storm_frac is 0).
     """
-    step = make_scenario_step(cfg, scheduler_names)
+    step = make_scenario_step(cfg, scheduler_names, has_storm)
     vstep = jax.vmap(step, in_axes=(0, None, None, 0))
     W = windows.kind.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), W)
@@ -167,17 +180,32 @@ def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
     return jax.lax.scan(body, state, (windows, keys))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "scheduler_names"))
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "scheduler_names", "has_storm"),
+                   donate_argnames=("state",))
 def run_scenarios_jit(state: SimState, windows: EventWindow,
                       knobs: ScenarioKnobs, cfg: SimConfig,
-                      scheduler_names: Tuple[str, ...], seed: int = 0):
-    return run_scenarios(state, windows, knobs, cfg, scheduler_names, seed)
+                      scheduler_names: Tuple[str, ...], seed: int = 0,
+                      has_storm: bool = True):
+    """Donating fleet entry point: the (B, max_tasks, ...) tables of
+    ``state`` back the output lanes instead of being double-buffered —
+    thread the returned state; do not reuse the argument."""
+    return run_scenarios(state, windows, knobs, cfg, scheduler_names, seed,
+                         has_storm)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
+def resync_fleet_jit(state: SimState, cfg: SimConfig) -> SimState:
+    """Per-lane full recompute of both accounting tallies — the fleet
+    driver's periodic drift resync under incremental accounting."""
+    return jax.vmap(lambda s: eng.recompute_accounting(s, cfg))(state)
 
 
 def run_scenarios_sharded(state: SimState, windows: EventWindow,
                           knobs: ScenarioKnobs, cfg: SimConfig,
                           scheduler_names: Tuple[str, ...], mesh: Mesh,
-                          seed: int = 0
+                          seed: int = 0, has_storm: bool = True
                           ) -> Tuple[SimState, Dict[str, jax.Array]]:
     """``run_scenarios`` with the scenario axis split over a device mesh.
 
@@ -195,7 +223,7 @@ def run_scenarios_sharded(state: SimState, windows: EventWindow,
                          f"'{FLEET_AXIS}' mesh axis — pad the spec list")
 
     def body(s, w, k):
-        return run_scenarios(s, w, k, cfg, scheduler_names, seed)
+        return run_scenarios(s, w, k, cfg, scheduler_names, seed, has_storm)
 
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(FLEET_AXIS), P(), P(FLEET_AXIS)),
@@ -205,10 +233,12 @@ def run_scenarios_sharded(state: SimState, windows: EventWindow,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "scheduler_names", "mesh"))
+                   static_argnames=("cfg", "scheduler_names", "mesh",
+                                    "has_storm"),
+                   donate_argnames=("state",))
 def run_scenarios_sharded_jit(state: SimState, windows: EventWindow,
                               knobs: ScenarioKnobs, cfg: SimConfig,
                               scheduler_names: Tuple[str, ...], mesh: Mesh,
-                              seed: int = 0):
+                              seed: int = 0, has_storm: bool = True):
     return run_scenarios_sharded(state, windows, knobs, cfg, scheduler_names,
-                                 mesh, seed)
+                                 mesh, seed, has_storm)

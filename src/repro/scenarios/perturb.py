@@ -50,6 +50,8 @@ import jax.numpy as jnp
 from repro.config import SimConfig
 from repro.core.events import EventKind, EventWindow
 from repro.core.state import SimState, TASK_EMPTY, TASK_PENDING, TASK_RUNNING
+from repro.core.stats import ACCOUNTED_USAGE_COLS
+from repro.kernels.segment_usage.ops import segment_usage
 from repro.scenarios.spec import ScenarioKnobs
 
 # distinct per-knob salt offsets so one slot's fates are independent draws
@@ -224,18 +226,40 @@ def expire_injected(state: SimState, k: ScenarioKnobs, cfg: SimConfig
     live = state.task_state[rows] != TASK_EMPTY
     victim = injected_then & (w0 >= 0) & live & (k.arrival_rate > 1.0)
     n = jnp.sum(victim).astype(jnp.int32)
+    was_running = victim & (state.task_state[rows] == TASK_RUNNING)
+    old_node = state.task_node[rows]
     task_state = state.task_state.at[rows].set(
         jnp.where(victim, jnp.int8(TASK_EMPTY), state.task_state[rows]))
     task_node = state.task_node.at[rows].set(
         jnp.where(victim, -1, state.task_node[rows]))
-    return state._replace(task_state=task_state, task_node=task_node,
-                          completions=state.completions + n)
+    state = state._replace(task_state=task_state, task_node=task_node,
+                           completions=state.completions + n)
+    if cfg.incremental_accounting:
+        # debit removed *running* clones from their nodes — an O(pool)
+        # scatter (the pool is small), matching what a full recompute of the
+        # post-expiry table would drop. Lanes without victims subtract
+        # exact zeros, so the lane-0 bitwise identity survives.
+        idxn = jnp.where(was_running, old_node, cfg.max_nodes)
+        ucols = jnp.array(ACCOUNTED_USAGE_COLS)
+        sub = jnp.where(was_running[:, None], state.task_req[rows], 0.0)
+        subu = jnp.where(was_running[:, None],
+                         state.task_usage[rows][:, ucols], 0.0)
+        state = state._replace(
+            node_reserved=state.node_reserved.at[idxn].add(-sub, mode="drop"),
+            node_used=state.node_used.at[idxn].add(-subu, mode="drop"))
+    return state
 
 
 def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:
     """Per-window eviction storm: force a hashed fraction of running tasks
     back to pending. The draw mixes the window counter with the task slot so
-    different windows hit different victims, yet reruns are reproducible."""
+    different windows hit different victims, yet reruns are reproducible.
+
+    Under incremental accounting the victims' contributions are debited
+    with a masked segment-sum (two passes — still cheaper than the three
+    full recomputes the delta path replaces); storm-free fleets skip this
+    entirely via the ``has_storm`` static flag in batch.py.
+    """
     T = cfg.max_tasks
     slots = jnp.arange(T, dtype=jnp.uint32)
     mix = (slots * jnp.uint32(0x9E3779B1)
@@ -243,7 +267,20 @@ def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:
     hit = hash01(mix, _SALT_STORM, cfg) < k.storm_frac
     victim = (state.task_state == TASK_RUNNING) & hit
     n = jnp.sum(victim).astype(jnp.int32)
+    node_reserved, node_used = state.node_reserved, state.node_used
+    if cfg.incremental_accounting:
+        # one fused pass: scatter cost is dominated by the T-row walk, not
+        # the value width, so req + usage debit together
+        R = state.task_req.shape[1]
+        ucols = state.task_usage[:, jnp.array(ACCOUNTED_USAGE_COLS)]
+        sub = segment_usage(state.task_node,
+                            jnp.concatenate([state.task_req, ucols], axis=1),
+                            victim, cfg.max_nodes,
+                            use_kernel=cfg.use_kernels)
+        node_reserved = node_reserved - sub[:, :R]
+        node_used = node_used - sub[:, R:]
     return state._replace(
         task_state=jnp.where(victim, jnp.int8(TASK_PENDING), state.task_state),
         task_node=jnp.where(victim, -1, state.task_node),
+        node_reserved=node_reserved, node_used=node_used,
         evictions=state.evictions + n)

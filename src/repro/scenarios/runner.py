@@ -69,6 +69,9 @@ class ScenarioFleet(WindowedDriver):
                 lanes.append(ScenarioSpec(name=f"_pad{i}",
                                           scheduler=lanes[0].scheduler))
         self._lane_specs = lanes
+        # static promise to the compiler: storm-free fleets drop the
+        # eviction-storm pass (and its accounting debits) entirely
+        self._has_storm = any(s.evict_storm_frac > 0.0 for s in lanes)
         self.knobs, self.scheduler_names = build_knobs(lanes)
         self.knobs = batch_mod.shard_over_fleet(self.knobs, mesh)
         self.state = batch_mod.init_batched_state(cfg, len(lanes), mesh)
@@ -110,14 +113,18 @@ class ScenarioFleet(WindowedDriver):
         if self.mesh is not None:
             self.state, stats = batch_mod.run_scenarios_sharded_jit(
                 self.state, batch, self.knobs, self.cfg,
-                self.scheduler_names, self.mesh, seed)
+                self.scheduler_names, self.mesh, seed,
+                has_storm=self._has_storm)
         else:
             self.state, stats = batch_mod.run_scenarios_jit(
                 self.state, batch, self.knobs, self.cfg,
-                self.scheduler_names, seed)
+                self.scheduler_names, seed, has_storm=self._has_storm)
         if self.n_lanes != self.n_scenarios:
             stats = jax.tree.map(lambda x: x[:, :self.n_scenarios], stats)
         return stats
+
+    def _resync(self):
+        return batch_mod.resync_fleet_jit(self.state, self.cfg)
 
     def report(self, baseline: int = 0) -> dict:
         return scenario_report(self.names, self.stats_frame(),

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SimConfig
+from repro.core.stats import ACCOUNTED_USAGE_COLS
 from repro.core.state import SimState, TASK_RUNNING
 from repro.kernels.placement_commit.ops import placement_commit
 
@@ -28,20 +29,34 @@ def finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
     reservation tally (true best-fit-decreasing) instead of static pref.
     May be a traced bool scalar (the scenario fleet dispatches schedulers
     per-lane at runtime); the static True/False fast paths stay unchanged.
+
+    Under incremental accounting the commit pass also settles the books: the
+    kernel's final reservation tally (held resident across its grid steps)
+    becomes node_reserved directly, and the placed tasks' usage rows are
+    scattered into node_used — O(P) work replacing the engine's post-commit
+    O(max_tasks) segment-sum recompute.
     """
     total = jnp.where(state.node_active[:, None], state.node_total, -1.0)
     denom = jnp.maximum(state.node_total, 1e-6)
     req = state.task_req[idx]                                   # (P, R)
 
-    node_of = placement_commit(pref, req, base_ok, valid, total, denom,
-                               state.node_reserved, dynamic_bestfit,
-                               use_kernel=cfg.use_kernels)
+    node_of, tally = placement_commit(pref, req, base_ok, valid, total, denom,
+                                      state.node_reserved, dynamic_bestfit,
+                                      use_kernel=cfg.use_kernels,
+                                      return_tally=True)
 
     placed = node_of >= 0
     task_state = state.task_state.at[idx].set(
         jnp.where(placed, TASK_RUNNING, state.task_state[idx]).astype(jnp.int8))
     task_node = state.task_node.at[idx].set(
         jnp.where(placed, node_of, state.task_node[idx]))
-    return state._replace(
+    state = state._replace(
         task_state=task_state, task_node=task_node,
         placements=state.placements + placed.sum().astype(jnp.int32))
+    if cfg.incremental_accounting:
+        used_cols = state.task_usage[idx][:, jnp.array(ACCOUNTED_USAGE_COLS)]
+        node_used = state.node_used.at[
+            jnp.where(placed, node_of, cfg.max_nodes)].add(
+                jnp.where(placed[:, None], used_cols, 0.0), mode="drop")
+        state = state._replace(node_reserved=tally, node_used=node_used)
+    return state

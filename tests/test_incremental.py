@@ -1,0 +1,265 @@
+"""Incremental-accounting equivalence suite.
+
+The delta-maintained ``node_reserved``/``node_used`` tallies must track the
+full segment-sum recompute at every window, and — because the scheduler
+reads the tallies — the two modes must make **bit-identical** scheduling
+decisions (``task_node``) across every registered scheduler, the kernelised
+commit path, and the scenario fleet's ``lax.switch`` dispatch.
+
+Event streams are random but *grid-aligned* (all resource values are small
+multiples of 1/128), so every sum the two modes take is exact in float32
+and bitwise comparison is meaningful; real-trace float drift is covered by
+the allclose oracle checks plus the drivers' periodic resync
+(``SimConfig.resync_windows``, tested in tests/test_pipeline_async.py).
+
+Deterministic seed sweeps always run; hypothesis widens the input space
+when installed (CI does).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.config import REDUCED_SIM
+from repro.core import engine as eng
+from repro.core.events import (EventKind, HostEvent, REMOVE_REASON_EVICT,
+                               pack_window, stack_windows)
+from repro.core.state import init_state, validate_invariants
+from repro.sched import get_scheduler, list_schedulers
+from repro.scenarios import batch as batch_mod
+from repro.scenarios.spec import ScenarioSpec, build_knobs
+
+CFG_INC = dataclasses.replace(
+    REDUCED_SIM, max_nodes=16, max_tasks=96, max_events_per_window=64,
+    sched_batch=24, incremental_accounting=True)
+CFG_FULL = dataclasses.replace(CFG_INC, incremental_accounting=False)
+
+ALL_SCHEDULERS = [e.name for e in list_schedulers()]
+
+
+def _grid(r, lo, hi, q=128):
+    """Random resources exactly representable in f32 (multiples of 1/q)."""
+    return float(r.integers(lo, hi)) / q
+
+
+def _stream(seed, n_windows=8, n_nodes=10, n_slots=48, cfg=CFG_INC):
+    """Random grid-aligned event soup exercising every delta path: adds,
+    removals (incl. EVICT reason), requirement updates on running tasks,
+    usage samples, node churn, capacity updates, attrs + constraints."""
+    r = np.random.default_rng(seed)
+    windows = [[HostEvent(0, EventKind.ADD_NODE, m,
+                          a=(_grid(r, 64, 256), _grid(r, 64, 256),
+                             _grid(r, 64, 256)))
+                for m in range(n_nodes)]]
+    for _ in range(n_windows - 1):
+        evs = []
+        for _ in range(int(r.integers(4, 24))):
+            kind = int(r.choice([1, 1, 1, 2, 3, 3, 5, 6, 7, 8, 10],
+                                p=[.18, .18, .18, .08, .1, .1, .08, .03,
+                                   .03, .02, .02]))
+            slot = int(r.integers(0, n_slots))
+            if kind == 1:
+                cons = ([(int(r.integers(0, 4)), int(r.integers(1, 5)),
+                          int(r.integers(0, 3)))]
+                        if r.random() < 0.25 else None)
+                evs.append(HostEvent(1, EventKind.ADD_TASK, slot,
+                                     a=(_grid(r, 1, 48), _grid(r, 1, 48),
+                                        _grid(r, 0, 16)),
+                                     prio=int(r.integers(0, 12)),
+                                     constraints=cons))
+            elif kind == 2:
+                evs.append(HostEvent(1, EventKind.UPDATE_TASK_REQUIRED, slot,
+                                     a=(_grid(r, 1, 48), _grid(r, 1, 48),
+                                        _grid(r, 0, 16)),
+                                     prio=int(r.integers(0, 12))))
+            elif kind == 3:
+                evs.append(HostEvent(2, EventKind.UPDATE_TASK_USED, slot,
+                                     u=tuple(_grid(r, 0, 32)
+                                             for _ in range(8))))
+            elif kind == 5:
+                reason = (float(REMOVE_REASON_EVICT)
+                          if r.random() < 0.3 else 0.0)
+                evs.append(HostEvent(2, EventKind.REMOVE_TASK, slot,
+                                     a=(reason, 0, 0)))
+            elif kind == 6:
+                evs.append(HostEvent(0, EventKind.ADD_NODE,
+                                     int(r.integers(0, n_nodes)),
+                                     a=(_grid(r, 64, 256), _grid(r, 64, 256),
+                                        _grid(r, 64, 256))))
+            elif kind == 7:
+                evs.append(HostEvent(0, EventKind.UPDATE_NODE_RESOURCES,
+                                     int(r.integers(0, n_nodes)),
+                                     a=(_grid(r, 16, 256), _grid(r, 16, 256),
+                                        _grid(r, 16, 256))))
+            elif kind == 8:
+                evs.append(HostEvent(0, EventKind.ADD_NODE_ATTR,
+                                     int(r.integers(0, n_nodes)),
+                                     attr_idx=int(r.integers(0, 4)),
+                                     attr_val=int(r.integers(0, 3))))
+            else:
+                evs.append(HostEvent(0, EventKind.REMOVE_NODE,
+                                     int(r.integers(0, n_nodes))))
+        windows.append(evs)
+    return [pack_window(cfg, evs, i) for i, evs in enumerate(windows)]
+
+
+def _stacked(seed, cfg=CFG_INC, **kw):
+    return jax.tree.map(jnp.asarray,
+                        stack_windows(_stream(seed, cfg=cfg, **kw)))
+
+
+def _assert_modes_equivalent(seed, scheduler, use_kernels=False,
+                             n_windows=8):
+    """Window-by-window: bitwise-equal task tables + decisions, bitwise-equal
+    tallies (grid data), and the incremental tallies match the segment-sum
+    oracle at EVERY window."""
+    cfg_i = dataclasses.replace(CFG_INC, use_kernels=use_kernels)
+    cfg_f = dataclasses.replace(CFG_FULL, use_kernels=use_kernels)
+    ws = _stream(seed, n_windows=n_windows)
+    keys = jax.random.split(jax.random.PRNGKey(0), len(ws))
+    step_i = jax.jit(eng.make_window_step(cfg_i, get_scheduler(scheduler)))
+    step_f = jax.jit(eng.make_window_step(cfg_f, get_scheduler(scheduler)))
+    s_i, s_f = init_state(cfg_i), init_state(cfg_f)
+    for k, w in enumerate(ws):
+        wd = jax.tree.map(jnp.asarray, w)
+        s_i, _ = step_i(s_i, wd, keys[k])
+        s_f, _ = step_f(s_f, wd, keys[k])
+        np.testing.assert_array_equal(np.asarray(s_i.task_node),
+                                      np.asarray(s_f.task_node))
+        np.testing.assert_array_equal(np.asarray(s_i.task_state),
+                                      np.asarray(s_f.task_state))
+        np.testing.assert_array_equal(np.asarray(s_i.node_reserved),
+                                      np.asarray(s_f.node_reserved))
+        np.testing.assert_array_equal(np.asarray(s_i.node_used),
+                                      np.asarray(s_f.node_used))
+        # oracle: incremental tallies vs a fresh full recompute
+        rec = eng.recompute_accounting(s_i, cfg_i)
+        np.testing.assert_allclose(np.asarray(s_i.node_reserved),
+                                   np.asarray(rec.node_reserved), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_i.node_used),
+                                   np.asarray(rec.node_used), atol=1e-5)
+    for c in ("placements", "evictions", "completions"):
+        assert int(getattr(s_i, c)) == int(getattr(s_f, c)), c
+    assert validate_invariants(s_i, cfg_i) == {}
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS)
+def test_incremental_matches_full_all_schedulers(scheduler):
+    """Bit-identical decisions + tallies for every registered scheduler."""
+    _assert_modes_equivalent(seed=hash(scheduler) % 1000, scheduler=scheduler)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_incremental_matches_full_seed_sweep(seed):
+    _assert_modes_equivalent(seed, "greedy")
+
+
+def test_incremental_matches_full_kernel_path():
+    """use_kernels=True: the commit kernel's emitted tally (instead of the
+    jnp ref's) feeds incremental accounting — still bit-identical."""
+    _assert_modes_equivalent(seed=7, scheduler="greedy", use_kernels=True,
+                             n_windows=6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           scheduler=st.sampled_from(ALL_SCHEDULERS))
+    def test_incremental_property(seed, scheduler):
+        _assert_modes_equivalent(seed, scheduler, n_windows=6)
+
+
+# ---------------------------------------------------------------------------
+# scenario fleet: lax.switch dispatch + perturbation delta paths
+# ---------------------------------------------------------------------------
+
+FLEET_CFG_INC = dataclasses.replace(CFG_INC, inject_slots=8,
+                                    inject_task_slots=32)
+FLEET_CFG_FULL = dataclasses.replace(FLEET_CFG_INC,
+                                     incremental_accounting=False)
+
+# every knob value is exact-arithmetic (powers of two / hashes only), so the
+# two modes stay bitwise-comparable through the perturbations too
+FLEET_SPECS = [
+    ScenarioSpec(name="base"),
+    ScenarioSpec(name="ff", scheduler="first_fit"),
+    ScenarioSpec(name="bf", scheduler="best_fit")
+    if "best_fit" in ALL_SCHEDULERS else ScenarioSpec(name="rr",
+                                                      scheduler="round_robin"),
+    ScenarioSpec(name="outage", node_outage_frac=0.25),
+    ScenarioSpec(name="half-cap", capacity_scale=0.5),
+    ScenarioSpec(name="thin", arrival_rate=0.5),
+    ScenarioSpec(name="amp", scheduler="first_fit", arrival_rate=2.0),
+    ScenarioSpec(name="storm", evict_storm_frac=0.25),
+    ScenarioSpec(name="usage", usage_scale=2.0),
+]
+
+
+def test_fleet_incremental_matches_full():
+    """The vmapped fleet (mixed schedulers, storm, expiring injected clones)
+    agrees across modes: bitwise task tables and tallies per lane, and the
+    per-lane oracle recompute stays allclose."""
+    B = len(FLEET_SPECS)
+    knobs, sched_names = build_knobs(FLEET_SPECS)
+    ws = _stacked(11, cfg=FLEET_CFG_INC, n_windows=10)
+    s_i, _ = batch_mod.run_scenarios_jit(
+        batch_mod.init_batched_state(FLEET_CFG_INC, B), ws, knobs,
+        FLEET_CFG_INC, sched_names, 0)
+    s_f, _ = batch_mod.run_scenarios_jit(
+        batch_mod.init_batched_state(FLEET_CFG_FULL, B), ws, knobs,
+        FLEET_CFG_FULL, sched_names, 0)
+    np.testing.assert_array_equal(np.asarray(s_i.task_node),
+                                  np.asarray(s_f.task_node))
+    np.testing.assert_array_equal(np.asarray(s_i.task_state),
+                                  np.asarray(s_f.task_state))
+    np.testing.assert_array_equal(np.asarray(s_i.node_reserved),
+                                  np.asarray(s_f.node_reserved))
+    np.testing.assert_array_equal(np.asarray(s_i.node_used),
+                                  np.asarray(s_f.node_used))
+    rec = batch_mod.resync_fleet_jit(
+        jax.tree.map(jnp.copy, s_i), FLEET_CFG_INC)
+    np.testing.assert_allclose(np.asarray(s_i.node_reserved),
+                               np.asarray(rec.node_reserved), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_i.node_used),
+                               np.asarray(rec.node_used), atol=1e-5)
+
+
+def test_fleet_has_storm_flag_is_identity_for_storm_free_lanes():
+    """Dropping the storm pass statically (has_storm=False) is bitwise
+    invisible when no lane storms."""
+    specs = [s for s in FLEET_SPECS if s.evict_storm_frac == 0.0]
+    knobs, sched_names = build_knobs(specs)
+    ws = _stacked(13, cfg=FLEET_CFG_INC, n_windows=6)
+    out = {}
+    for has_storm in (True, False):
+        s, _ = batch_mod.run_scenarios_jit(
+            batch_mod.init_batched_state(FLEET_CFG_INC, len(specs)), ws,
+            knobs, FLEET_CFG_INC, sched_names, 0, has_storm=has_storm)
+        out[has_storm] = jax.tree.map(np.asarray, s)
+    for a, b in zip(jax.tree.leaves(out[True]), jax.tree.leaves(out[False])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_commit_tally_matches_recompute():
+    """The tally the commit pass emits equals reserved0 + the placed
+    requests — adopted as node_reserved, it must equal what a segment-sum
+    over the post-commit table yields (grid data: bitwise)."""
+    cfg = CFG_INC
+    ws = _stream(3, n_windows=5)
+    state, _ = eng.run_windows(init_state(cfg),
+                               jax.tree.map(jnp.asarray, stack_windows(ws)),
+                               cfg, get_scheduler("greedy"))
+    rec = eng.recompute_accounting(state, cfg)
+    np.testing.assert_array_equal(np.asarray(state.node_reserved),
+                                  np.asarray(rec.node_reserved))
+    np.testing.assert_array_equal(np.asarray(state.node_used),
+                                  np.asarray(rec.node_used))
+    assert validate_invariants(state, cfg) == {}
