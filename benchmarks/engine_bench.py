@@ -1,14 +1,21 @@
-"""Engine hot-loop benchmark: incremental accounting vs full recompute.
+"""Engine hot-loop benchmark: the optimised path vs the PR-3-era baseline.
 
 Measures windows/sec through the jitted window scan — single-lane and the
-vmapped scenario fleet at B=8 — with ``cfg.incremental_accounting`` on
-(delta-maintained tallies, commit-kernel tally output, donated state
-buffers) against the pre-delta full-recompute path (three O(max_tasks)
-segment-sum recomputes per window), which stays available via
-``incremental_accounting=False``. Also:
+vmapped scenario fleet at B=8 — with the current defaults (incremental
+accounting, fused window stats, victim-compacted storm debits, donated
+state buffers) against the *full* path: ``incremental_accounting=False``
+(three O(max_tasks) segment-sum recomputes per window) plus
+``fused_window_stats=False`` (the pre-fusion ~6-pass stats body) — i.e.
+the engine as it stood before PRs 4-5. Also:
 
 * verifies equivalence while timing: final placements (``task_node``)
   bit-exact across modes, final accounting + stats allclose;
+* breaks the stats path down: unfused body vs fused jnp reference vs the
+  Pallas window-stats kernel, rows bitwise-compared across all three;
+* measures stats decimation: ``stats_stride=8`` headless sweeps (single
+  and fleet), final state bit-exact vs stride 1;
+* measures the storm-lane debit: victim-compacted scatter (default cap)
+  vs the legacy whole-table masked segment-sum;
 * times the host-side staging path: the WindowPrefetcher's preallocated
   buffer ring vs the per-batch ``np.stack`` it replaced;
 * reports end-to-end driver throughput (async stats + device-resident
@@ -18,10 +25,11 @@ The trace is synthetic and *grid-aligned* (every resource a multiple of
 1/128) so float sums are exact and the bit-exactness bar is meaningful.
 
 Writes ``BENCH_engine.json`` at the repo root. ``--quick`` shrinks shapes
-for the CI perf-smoke job; ``--check`` compares the measured
-incremental-vs-full speedups against the committed baseline and fails on a
+for the CI perf-smoke job; ``--check`` compares the measured speedups
+(single, fleet, storm fleet) against the committed baseline and fails on a
 >20% regression (speedup ratios are machine-independent, unlike absolute
-windows/sec). Acceptance bar: >= 1.5x on the fleet B=8 CPU benchmark.
+windows/sec) or any equivalence break. Acceptance bar: >= 2.5x single-lane
+and >= 2x storm-fleet vs the full path on CPU.
 """
 from __future__ import annotations
 
@@ -71,12 +79,13 @@ STORM_SPECS = FLEET_SPECS[:6] + [
 
 
 def make_cfg(quick: bool) -> SimConfig:
-    # max_tasks dominates deliberately: the tentpole's win is the removal
-    # of O(max_tasks) recomputes, and the paper cell runs 262K task slots —
-    # small tables would hide the effect behind the (mode-independent)
-    # commit scan + constraint match cost
+    # max_tasks dominates deliberately: the optimised path's win is the
+    # removal of O(max_tasks) work (accounting recomputes, the unfused
+    # stats passes, the storm debit sweep), and the paper cell runs 262K
+    # task slots — small tables would hide the effect behind the
+    # (mode-independent) commit scan + constraint match cost
     if quick:
-        return SimConfig(max_nodes=64, max_tasks=16_384,
+        return SimConfig(max_nodes=64, max_tasks=32_768,
                          max_events_per_window=512, sched_batch=64,
                          n_attr_slots=8, max_constraints=4)
     return SimConfig(max_nodes=128, max_tasks=65_536,
@@ -201,6 +210,108 @@ def bench_fleet(cfg_inc, cfg_full, windows, reps, specs):
     return out
 
 
+def bench_stats_path(cfg, windows, reps):
+    """Stats-path breakdown at the engine level (single lane, incremental
+    accounting throughout): unfused body vs fused jnp reference vs the
+    Pallas window-stats kernel (interpret mode on CPU; the kernel config
+    also kernelises the commit/constraint passes — noted in the key).
+    Rows are bitwise-compared across all three paths."""
+    W = windows.kind.shape[0]
+    variants = {
+        "unfused": dataclasses.replace(cfg, fused_window_stats=False),
+        "fused_ref": cfg,
+        "fused_kernel_all_kernels": dataclasses.replace(cfg,
+                                                        use_kernels=True),
+    }
+    rows = {}
+    out = {}
+    for name, c in variants.items():
+        def run():
+            s, st = eng.run_windows_jit(init_state(c), windows, c,
+                                        "greedy", 0)
+            jax.block_until_ready(s)
+            return st
+        rows[name] = jax.tree.map(np.asarray, run())
+        out[f"windows_per_sec_{name}"] = W / _wall(lambda: run(), reps)
+    out["fused_speedup_vs_unfused"] = (out["windows_per_sec_fused_ref"]
+                                       / out["windows_per_sec_unfused"])
+    out["rows_bitwise"] = bool(all(
+        np.array_equal(rows[v][k], rows["unfused"][k])
+        for v in ("fused_ref", "fused_kernel_all_kernels")
+        for k in rows["unfused"]))
+    return out
+
+
+def bench_stride(cfg_inc, windows, reps, specs):
+    """Stats decimation: stride-8 headless sweeps vs stride 1 (single lane
+    + fleet B=8), final states bit-exact by construction of the stride."""
+    W = windows.kind.shape[0]
+    cfg8 = dataclasses.replace(cfg_inc, stats_stride=8)
+    out = {"stride": 8}
+
+    finals = {}
+    for name, cfg in (("stride1", cfg_inc), ("stride8", cfg8)):
+        def run():
+            s, st = eng.run_windows_jit(init_state(cfg), windows, cfg,
+                                        "greedy", 0)
+            jax.block_until_ready(s)
+            return s
+        finals[name] = jax.tree.map(np.asarray, run())
+        out[f"single_windows_per_sec_{name}"] = W / _wall(lambda: run(),
+                                                          reps)
+    out["single_speedup"] = (out["single_windows_per_sec_stride8"]
+                             / out["single_windows_per_sec_stride1"])
+    out["single_state_bitexact"] = bool(all(
+        np.array_equal(a, b)
+        for a, b in zip(jax.tree.leaves(finals["stride1"]),
+                        jax.tree.leaves(finals["stride8"]))))
+
+    has_storm = any(s.evict_storm_frac > 0.0 for s in specs)
+    knobs, sched_names = build_knobs(specs)
+    for name, cfg in (("stride1", cfg_inc), ("stride8", cfg8)):
+        def run():
+            s, st = batch_mod.run_scenarios_jit(
+                batch_mod.init_batched_state(cfg, FLEET_B), windows, knobs,
+                cfg, sched_names, 0, has_storm=has_storm)
+            jax.block_until_ready(s)
+        run()
+        out[f"fleet_windows_per_sec_{name}"] = W / _wall(lambda: run(), reps)
+    out["fleet_speedup"] = (out["fleet_windows_per_sec_stride8"]
+                            / out["fleet_windows_per_sec_stride1"])
+    return out
+
+
+def bench_storm_compaction(cfg_inc, windows, reps, specs):
+    """Storm-lane debit: victim-compacted O(V) scatter (default cap) vs the
+    legacy whole-table masked segment-sum (cap >= max_tasks). The cap never
+    bites at these shapes, so the two fleets are bit-identical."""
+    W = windows.kind.shape[0]
+    knobs, sched_names = build_knobs(specs)
+    variants = {
+        "compacted": cfg_inc,
+        "masked_segment_sum": dataclasses.replace(
+            cfg_inc, storm_max_victims=cfg_inc.max_tasks),
+    }
+    finals = {}
+    out = {"victim_cap": cfg_inc.resolved_storm_max_victims}
+    for name, cfg in variants.items():
+        def run():
+            s, st = batch_mod.run_scenarios_jit(
+                batch_mod.init_batched_state(cfg, FLEET_B), windows, knobs,
+                cfg, sched_names, 0, has_storm=True)
+            jax.block_until_ready(s)
+            return s
+        finals[name] = jax.tree.map(np.asarray, run())
+        out[f"windows_per_sec_{name}"] = W / _wall(lambda: run(), reps)
+    out["speedup"] = (out["windows_per_sec_compacted"]
+                      / out["windows_per_sec_masked_segment_sum"])
+    out["states_bitexact"] = bool(all(
+        np.array_equal(a, b)
+        for a, b in zip(jax.tree.leaves(finals["compacted"]),
+                        jax.tree.leaves(finals["masked_segment_sum"]))))
+    return out
+
+
 def bench_staging(cfg, window_list, reps):
     """Host-side restacking: preallocated staging ring vs np.stack."""
     batch = 32
@@ -253,7 +364,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg_inc = make_cfg(args.quick)
-    cfg_full = dataclasses.replace(cfg_inc, incremental_accounting=False)
+    # the "full" baseline is the PR-3-era engine: full segment-sum
+    # recomputes AND the unfused ~6-pass stats body
+    cfg_full = dataclasses.replace(cfg_inc, incremental_accounting=False,
+                                   fused_window_stats=False)
     W = args.windows or (64 if args.quick else 128)
     reps = 3
 
@@ -280,6 +394,10 @@ def main(argv=None):
                                 FLEET_SPECS),
         "fleet_B8_storm": bench_fleet(cfg_inc, cfg_full, windows, reps,
                                       STORM_SPECS),
+        "stats_path": bench_stats_path(cfg_inc, windows, reps),
+        "stride8": bench_stride(cfg_inc, windows, reps, FLEET_SPECS),
+        "storm_compaction": bench_storm_compaction(cfg_inc, windows, reps,
+                                                   STORM_SPECS),
         "staging": bench_staging(cfg_inc, window_list, reps),
         "driver": bench_driver(cfg_inc, window_list, reps),
     }
@@ -293,6 +411,18 @@ def main(argv=None):
               f"incremental vs {r['windows_per_sec_full']:.1f} w/s full "
               f"-> {r['speedup']:.2f}x  (bitexact={r['placements_bitexact']}"
               f", allclose={r['accounting_allclose']})")
+    sp = result["stats_path"]
+    print(f"stats_path: {sp['windows_per_sec_unfused']:.1f} w/s unfused, "
+          f"{sp['windows_per_sec_fused_ref']:.1f} fused ref, "
+          f"{sp['windows_per_sec_fused_kernel_all_kernels']:.1f} kernel "
+          f"(rows bitwise={sp['rows_bitwise']})")
+    st8 = result["stride8"]
+    print(f"stride8: single {st8['single_speedup']:.2f}x, fleet "
+          f"{st8['fleet_speedup']:.2f}x vs stride 1 "
+          f"(state bitexact={st8['single_state_bitexact']})")
+    sc = result["storm_compaction"]
+    print(f"storm_compaction: {sc['speedup']:.2f}x vs masked segment-sum "
+          f"(V={sc['victim_cap']}, bitexact={sc['states_bitexact']})")
     print(f"staging: {result['staging']['speedup']:.2f}x vs np.stack; "
           f"driver e2e {result['driver']['windows_per_sec_e2e']:.1f} w/s; "
           f"-> {args.out}")
@@ -303,6 +433,15 @@ def main(argv=None):
                 and result[sec]["accounting_allclose"]):
             print(f"FAIL: {sec} equivalence broken")
             ok = False
+    if not result["stats_path"]["rows_bitwise"]:
+        print("FAIL: stats rows differ across unfused/fused/kernel paths")
+        ok = False
+    if not result["stride8"]["single_state_bitexact"]:
+        print("FAIL: stride-8 final state differs from stride 1")
+        ok = False
+    if not result["storm_compaction"]["states_bitexact"]:
+        print("FAIL: compacted storm debit diverged from masked segment-sum")
+        ok = False
     if args.check:
         if baseline is None:
             print(f"note: no committed baseline at {JSON_PATH}; "
@@ -311,9 +450,12 @@ def main(argv=None):
             print("note: committed baseline was measured at different "
                   "shapes (quick mismatch); skipping regression gate")
         else:
-            for sec in ("single", "fleet_B8"):
+            for sec in ("single", "fleet_B8", "fleet_B8_storm"):
                 got = result[sec]["speedup"]
-                want = baseline[sec]["speedup"]
+                want = baseline.get(sec, {}).get("speedup")
+                if want is None:
+                    print(f"note: no committed {sec} speedup; skipping")
+                    continue
                 if got < 0.8 * want:
                     print(f"FAIL: {sec} speedup {got:.2f}x regressed >20% "
                           f"vs committed {want:.2f}x")
@@ -321,6 +463,12 @@ def main(argv=None):
                 else:
                     print(f"check {sec}: {got:.2f}x vs committed "
                           f"{want:.2f}x OK")
+            want8 = baseline.get("stride8", {}).get("single_speedup")
+            got8 = result["stride8"]["single_speedup"]
+            if want8 is not None and got8 < 0.8 * want8:
+                print(f"FAIL: stride-8 speedup {got8:.2f}x regressed >20% "
+                      f"vs committed {want8:.2f}x")
+                ok = False
     if not ok:
         sys.exit(1)
 

@@ -22,7 +22,7 @@ from repro.baselines.cloudsim_like import run_benchmark as cloudsim_run
 from repro.config import SimConfig
 from repro.core import engine as eng
 from repro.core.events import EventKind, HostEvent, pack_window, stack_windows
-from repro.core.schedulers import get_scheduler
+from repro.sched import get_scheduler
 from repro.core.state import init_state
 
 GRID = [(50, 550), (125, 1375), (250, 2750), (500, 5500), (1250, 13750)]

@@ -123,7 +123,7 @@ def run(csv_rows):
         # isolating the vmap + thin-switch dispatch from parse amortisation
         from repro.core import engine as eng
         from repro.core.events import stack_windows
-        from repro.core.schedulers import get_scheduler
+        from repro.sched import get_scheduler
         from repro.core.state import init_state
 
         windows = jax.tree.map(

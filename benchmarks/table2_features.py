@@ -9,7 +9,8 @@ import numpy as np
 
 def run(csv_rows):
     from repro.config import SimConfig
-    from repro.core import schedulers, stats
+    from repro.core import stats
+    from repro import sched as schedulers
     from repro.core.events import EventKind
     from repro.parsers import gcd
 

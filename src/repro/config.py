@@ -299,6 +299,50 @@ class SimConfig:
                                       # (rounded up to a batch boundary),
                                       # bounding float accumulation drift.
                                       # 0 disables the resync
+    fused_window_stats: bool = True   # build each stats row from ONE fused
+                                      # pass over the task table
+                                      # (kernels/window_stats; the Pallas
+                                      # kernel under use_kernels, else the
+                                      # fused jnp reference). False restores
+                                      # the pre-fusion ~6-pass stats body
+                                      # (core.stats.window_stats_ref) — the
+                                      # equivalence oracle and the PR-3-era
+                                      # baseline engine_bench measures
+                                      # against
+    stats_stride: int = 1             # emit a stats row every k-th window
+                                      # (headless sweeps): the engines scan
+                                      # k windows per stats row, so skipped
+                                      # windows pay ZERO stats cost. Counters
+                                      # are cumulative in SimState (and the
+                                      # fleet's per-window injected count is
+                                      # accumulated across the chunk), so no
+                                      # events are lost — each emitted row
+                                      # equals the corresponding stride-1
+                                      # row. Drivers round batch_windows up
+                                      # to a multiple of the stride; a
+                                      # short tail batch still emits a final
+                                      # partial row so the run always ends
+                                      # on a reported state
+    storm_max_victims: int = 0        # per-window cap on eviction-storm
+                                      # victims (scenario fleets). Victims
+                                      # up to the cap are *compacted* — a
+                                      # searchsorted over the victim cumsum
+                                      # gathers the <=V victim rows, and the
+                                      # incremental accounting debit becomes
+                                      # an O(V) delta scatter instead of a
+                                      # masked O(max_tasks) segment-sum per
+                                      # storm lane per window. 0 = auto
+                                      # (max_tasks // 8, at least 64);
+                                      # >= max_tasks disables the cap AND
+                                      # the compaction (the legacy
+                                      # masked-segment-sum debit). NOTE a
+                                      # *binding* cap truncates the storm
+                                      # AND keeps the lowest-slot hits
+                                      # (slot order, not a uniform
+                                      # subsample) — size it above
+                                      # storm_frac x expected running tasks,
+                                      # or set >= max_tasks for unbounded
+                                      # storms
     trace_time_shift_us: int = 600_000_000  # GCD's 10-minute shift
     scenario_salt: int = 0x5DEECE66   # seeds the deterministic perturbation
                                       # hashes of the what-if scenario fleet
@@ -320,6 +364,10 @@ class SimConfig:
             raise ValueError("inject_slots / inject_task_slots must be >= 0")
         if self.resync_windows < 0:
             raise ValueError("resync_windows must be >= 0 (0 disables)")
+        if self.stats_stride < 1:
+            raise ValueError("stats_stride must be >= 1 (1 = every window)")
+        if self.storm_max_victims < 0:
+            raise ValueError("storm_max_victims must be >= 0 (0 = auto)")
         if self.inject_slots >= self.max_events_per_window:
             raise ValueError(
                 f"inject_slots={self.inject_slots} leaves no event rows "
@@ -342,6 +390,17 @@ class SimConfig:
             return 0
         return self.inject_task_slots or min(self.max_tasks // 4,
                                              self.inject_slots * 64)
+
+    @property
+    def resolved_storm_max_victims(self) -> int:
+        """Eviction-storm victim cap (auto: max_tasks // 8, at least 64).
+
+        Values >= max_tasks mean 'uncapped': the storm keeps the legacy
+        masked segment-sum debit instead of the victim-compacted scatter.
+        """
+        if self.storm_max_victims:
+            return min(self.storm_max_victims, self.max_tasks)
+        return min(max(self.max_tasks // 8, 64), self.max_tasks)
 
     @property
     def real_task_slots(self) -> int:

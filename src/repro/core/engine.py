@@ -228,13 +228,17 @@ def resync_accounting_jit(state: SimState, cfg: SimConfig) -> SimState:
     return recompute_accounting(state, cfg)
 
 
-def make_window_step(cfg: SimConfig, scheduler_fn: Callable
-                     ) -> Callable[[SimState, EventWindow, jax.Array],
-                                   Tuple[SimState, Dict[str, jax.Array]]]:
-    """Build the jit-able single-window transition."""
+def make_window_advance(cfg: SimConfig, scheduler_fn: Callable
+                        ) -> Callable[[SimState, EventWindow, jax.Array],
+                                      SimState]:
+    """Build the stats-free single-window transition (state in, state out).
 
-    def sim_window_step(state: SimState, w: EventWindow, rng: jax.Array
-                        ) -> Tuple[SimState, Dict[str, jax.Array]]:
+    The stats row is deliberately NOT part of this function: under
+    ``cfg.stats_stride > 1`` the scan advances k windows per emitted row, so
+    skipped windows pay zero stats cost (counters are cumulative in the
+    state, so nothing is lost)."""
+
+    def advance(state: SimState, w: EventWindow, rng: jax.Array) -> SimState:
         state = apply_node_events(state, w, cfg)
         state = apply_task_events(state, w, cfg)
         if not cfg.incremental_accounting:
@@ -245,25 +249,91 @@ def make_window_step(cfg: SimConfig, scheduler_fn: Callable
         state = scheduler_fn(state, cfg, rng)
         if not cfg.incremental_accounting:
             state = recompute_accounting(state, cfg)
-        state = state._replace(window=state.window + 1)
+        return state._replace(window=state.window + 1)
+
+    return advance
+
+
+def make_window_step(cfg: SimConfig, scheduler_fn: Callable
+                     ) -> Callable[[SimState, EventWindow, jax.Array],
+                                   Tuple[SimState, Dict[str, jax.Array]]]:
+    """Build the jit-able single-window transition (advance + stats row)."""
+    advance = make_window_advance(cfg, scheduler_fn)
+
+    def sim_window_step(state: SimState, w: EventWindow, rng: jax.Array
+                        ) -> Tuple[SimState, Dict[str, jax.Array]]:
+        state = advance(state, w, rng)
         return state, stats_mod.window_stats(state, cfg)
 
     return sim_window_step
 
 
+def strided_chunks(tree, W: int, stride: int):
+    """Split a (W, ...) pytree into ((M, k, ...) head, (r, ...) tail | None)
+    with M = W // k full chunks — the shared chunking of the strided-stats
+    scans (engine + scenario fleet), so their row cadence cannot drift."""
+    M, r = divmod(W, stride)
+    head = None
+    if M:
+        head = jax.tree.map(
+            lambda x: x[:M * stride].reshape((M, stride) + x.shape[1:]), tree)
+    tail = jax.tree.map(lambda x: x[M * stride:], tree) if r else None
+    return head, tail
+
+
+def scan_strided(chunk: Callable, state, tree, W: int, stride: int):
+    """Scan ``chunk`` (state, (k, ...) slice -> (state, row)) over the W
+    leading items of ``tree`` in stride-sized chunks, the non-divisible tail
+    as ONE final partial chunk, concatenating the emitted rows — the single
+    implementation of the strided-stats cadence, shared by
+    ``run_windows`` and the scenario fleet's ``run_scenarios``. Requires
+    W > 0 (callers route W == 0 through their stride-1 empty scan)."""
+    assert W > 0, "scan_strided needs at least one item"
+    head, tail = strided_chunks(tree, W, stride)
+    rows = []
+    if head is not None:
+        state, r_head = jax.lax.scan(chunk, state, head)
+        rows.append(r_head)
+    if tail is not None:
+        state, r_tail = chunk(state, tail)
+        rows.append(jax.tree.map(lambda x: x[None], r_tail))
+    stats = (rows[0] if len(rows) == 1 else
+             jax.tree.map(lambda a, b: jnp.concatenate([a, b]), *rows))
+    return state, stats
+
+
 def run_windows(state: SimState, windows: EventWindow, cfg: SimConfig,
                 scheduler_fn: Callable, seed: int = 0
                 ) -> Tuple[SimState, Dict[str, jax.Array]]:
-    """Scan the engine over stacked windows (W leading dim on every field)."""
-    step = make_window_step(cfg, scheduler_fn)
+    """Scan the engine over stacked windows (W leading dim on every field).
+
+    With ``cfg.stats_stride == k > 1`` the scan emits one stats row per k
+    windows — row j is computed on the state after window (j+1)*k, i.e.
+    exactly every k-th row of the stride-1 scan (cumulative counters make
+    the skipped windows' events visible in the next emitted row).  A
+    non-divisible tail still emits one final partial row, so the last row
+    always reflects the final state.  RNG keys are derived per *window*
+    (identically to stride 1), so the final state is bitwise independent of
+    the stride.
+    """
+    advance = make_window_advance(cfg, scheduler_fn)
     W = windows.kind.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), W)
+    stride = cfg.stats_stride
 
-    def body(s, xs):
-        w, k = xs
-        return step(s, w, k)
+    if stride == 1 or W == 0:     # W == 0: the empty scan handles it cleanly
+        def body(s, xs):
+            w, k = xs
+            s = advance(s, w, k)
+            return s, stats_mod.window_stats(s, cfg)
 
-    return jax.lax.scan(body, state, (windows, keys))
+        return jax.lax.scan(body, state, (windows, keys))
+
+    def chunk(s, xs):
+        s, _ = jax.lax.scan(lambda s2, x2: (advance(s2, *x2), None), s, xs)
+        return s, stats_mod.window_stats(s, cfg)
+
+    return scan_strided(chunk, state, (windows, keys), W, stride)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "scheduler_name"),

@@ -187,9 +187,16 @@ class WindowedDriver:
     def __init__(self, cfg: SimConfig, window_source: Iterator[EventWindow],
                  batch_windows: int = 32, seed: Optional[int] = None):
         self.cfg = cfg
+        # under stats decimation every full batch must emit whole stats
+        # chunks, so the global row cadence stays exactly every stride-th
+        # window (only the final short tail batch may add a partial row)
+        if cfg.stats_stride > 1:
+            k = cfg.stats_stride
+            batch_windows = ((batch_windows + k - 1) // k) * k
         self.prefetcher = WindowPrefetcher(cfg, window_source, batch_windows)
         self.seed = cfg.seed if seed is None else seed
         self.stats_rows: List[Dict[str, np.ndarray]] = []
+        self._row_windows: List[int] = []
         self.windows_done = 0
         self.resyncs_done = 0
         self._since_resync = 0
@@ -219,6 +226,11 @@ class WindowedDriver:
                 time.sleep(0.01)
             W = batch.kind.shape[0]
             stats = self._advance(batch, self.seed + self.windows_done)
+            k = self.cfg.stats_stride
+            m, r = divmod(W, k)
+            self._row_windows.extend(
+                [self.windows_done + (j + 1) * k for j in range(m)]
+                + ([self.windows_done + W] if r else []))
             self.windows_done += W
             self.stats_rows.append(stats)
             self._inflight.append(stats)
@@ -243,13 +255,27 @@ class WindowedDriver:
         jax.block_until_ready(self.state)
         return self.state
 
+    def stats_window_indices(self) -> np.ndarray:
+        """The cumulative window count each stats row was emitted at.
+
+        Stride 1 gives ``[1, 2, ..., windows_done]``; under stats decimation
+        (``cfg.stats_stride == k``) it is ``[k, 2k, ...]`` plus, if the run
+        ended mid-chunk, one final partial row at ``windows_done``.  The
+        length always equals the leading dimension of every
+        ``stats_frame()`` array.
+        """
+        return np.asarray(self._row_windows, dtype=np.int64)
+
     def stats_frame(self) -> Dict[str, np.ndarray]:
-        """Concatenate per-batch stat rows into (total_windows, ...) arrays.
+        """Concatenate per-batch stat rows into (n_rows, ...) arrays.
 
         Materialisation point of the async stats stream: device rows are
         pulled to host (and scalar rows normalised to length-1 vectors)
         here, once, in place — so repeated calls don't re-transfer and the
-        drive loop itself never syncs on stats.
+        drive loop itself never syncs on stats.  With ``stats_stride == 1``
+        n_rows == windows_done; under decimation each batch contributes
+        ceil(W / stride) rows whose window positions are
+        ``stats_window_indices()``.
         """
         if not self.stats_rows:
             return {}
@@ -257,8 +283,16 @@ class WindowedDriver:
             self.stats_rows[i] = {k: np.atleast_1d(np.asarray(v))
                                   for k, v in r.items()}
         keys = self.stats_rows[0].keys()
-        return {k: np.concatenate([r[k] for r in self.stats_rows])
-                for k in keys}
+        frame = {k: np.concatenate([r[k] for r in self.stats_rows])
+                 for k in keys}
+        if self.cfg.stats_stride > 1 and frame:
+            # guard against the host-side cadence bookkeeping drifting from
+            # the device-side scan_strided row semantics
+            n_rows = len(next(iter(frame.values())))
+            assert n_rows == len(self._row_windows), (
+                f"strided stats cadence drift: {n_rows} frame rows vs "
+                f"{len(self._row_windows)} tracked window indices")
+        return frame
 
 
 class Simulation(WindowedDriver):

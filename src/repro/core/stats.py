@@ -5,6 +5,22 @@ Each window emits a flat dict of scalars/vectors covering requested *and*
 actually-used resources (users waste up to 98% of requests — paper §I), the
 secondary parameters (disk I/O time, CPI, MAI, page cache), task/node
 population, and scheduler activity.
+
+Two implementations produce the row:
+
+* **fused** (``cfg.fused_window_stats``, the default): every task-table
+  reduction (running/pending counts, masked usage sum, per-priority
+  population) comes out of ONE pass via ``kernels/window_stats`` — the
+  pure-jnp fused reference, or the Pallas kernel under ``cfg.use_kernels``
+  (grid-stepped task tiles with all accumulators VMEM-resident, natively
+  batched across fleet lanes via ``custom_vmap``);
+* **unfused** (``fused_window_stats=False``): :func:`window_stats_ref`, the
+  pre-fusion body (~6 independent full passes) — kept as the equivalence
+  oracle and the PR-3-era baseline the engine benchmark measures against.
+
+On exact-arithmetic (grid-aligned) data the two are bitwise identical —
+integer reductions always are, and the float expressions mirror each other
+term for term (tests/test_window_stats.py holds all paths to that bar).
 """
 from __future__ import annotations
 
@@ -15,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.config import SimConfig
 from repro.core.state import SimState, TASK_PENDING, TASK_RUNNING
+from repro.kernels.window_stats.ops import window_reductions
 
 # task_usage column layout (GCD task_usage table, condensed)
 U_CPU, U_CANON_MEM, U_ASSIGN_MEM, U_PAGE_CACHE = 0, 1, 2, 3
@@ -30,6 +47,43 @@ ACCOUNTED_USAGE_COLS = (U_CPU, U_CANON_MEM, U_DISK_SPACE)
 
 
 def window_stats(state: SimState, cfg: SimConfig) -> Dict[str, jax.Array]:
+    """One stats row from the current state (fused path; see module doc)."""
+    if not cfg.fused_window_stats:
+        return window_stats_ref(state, cfg)
+    red = window_reductions(
+        state.task_state, state.task_usage, state.task_prio,
+        state.node_active, state.node_total, state.node_reserved,
+        state.node_used, use_kernel=cfg.use_kernels)
+    denom = jnp.maximum(red.cap, 1e-9)
+    usage_mean = jnp.where(red.n_running > 0,
+                           red.usage_sum / jnp.maximum(red.n_running, 1),
+                           0.0)
+    return {
+        "n_nodes": red.n_nodes,
+        "n_running": red.n_running,
+        "n_pending": red.n_pending,
+        "running_by_priority": red.by_prio[:, 0],
+        "pending_by_priority": red.by_prio[:, 1],
+        "capacity": red.cap,
+        "reserved": red.reserved,
+        "used": red.used,
+        "reserved_frac": red.reserved / denom,
+        "used_frac": red.used / denom,
+        "overestimate_frac": 1.0 - red.used / jnp.maximum(red.reserved, 1e-9),
+        "usage_mean": usage_mean,
+        "util_balance_var": red.util_var,
+        "reserved_balance_var": red.res_var,
+        "evictions": state.evictions,
+        "completions": state.completions,
+        "placements": state.placements,
+        "overflow_drops": state.overflow_drops,
+    }
+
+
+def window_stats_ref(state: SimState, cfg: SimConfig) -> Dict[str, jax.Array]:
+    """The pre-fusion stats body: ~6 independent full passes over the task
+    table.  Equivalence oracle for the fused path and the stats half of the
+    PR-3-era full baseline in ``benchmarks/engine_bench.py``."""
     running = state.task_state == TASK_RUNNING
     pending = state.task_state == TASK_PENDING
     active = state.node_active

@@ -1,6 +1,6 @@
 """Pure-jnp oracle for the placement-commit kernel: the sequential
 capacity-checked assignment loop lifted verbatim out of the seed scheduler
-finaliser (core/schedulers.py `_finalize`), so the kernel and the engine are
+finaliser (now ``sched.commit.finalize``), so the kernel and the engine are
 validated against a single source of truth.
 
 The loop walks the P pending tasks in priority order; each step re-checks

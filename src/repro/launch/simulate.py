@@ -45,6 +45,8 @@ def build_cfg(args) -> SimConfig:
         over["speed_factor"] = args.speed_factor
     if args.use_kernels:
         over["use_kernels"] = True
+    if args.stats_stride != 1:      # 0/negative hit SimConfig's validator
+        over["stats_stride"] = args.stats_stride
     if args.nodes and not args.tasks:
         over["max_tasks"] = max(args.nodes * 16, 512)
     if not args.cell_a:
@@ -69,6 +71,10 @@ def main(argv=None):
     ap.add_argument("--speed-factor", type=float, default=0.0)
     ap.add_argument("--use-kernels", action="store_true",
                     help="Pallas kernels (interpret mode on CPU)")
+    ap.add_argument("--stats-stride", type=int, default=1,
+                    help="emit a stats row every k-th window (headless "
+                         "sweeps; skipped windows pay zero stats cost, "
+                         "cumulative counters lose nothing)")
     ap.add_argument("--precompile", default=None,
                     help="path: pre-compile events to npz then replay (§V-A)")
     ap.add_argument("--snapshot", default=None,

@@ -61,6 +61,8 @@ def build_cfg(args) -> SimConfig:
         over["max_tasks"] = args.tasks
     if args.use_kernels:
         over["use_kernels"] = True
+    if args.stats_stride != 1:      # 0/negative hit SimConfig's validator
+        over["stats_stride"] = args.stats_stride
     if not args.cell_a:
         over.setdefault("max_events_per_window", 4096)
         over.setdefault("sched_batch", 256)
@@ -120,6 +122,10 @@ def main(argv=None):
     ap.add_argument("--baseline", type=int, default=0,
                     help="scenario index deltas are computed against")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--stats-stride", type=int, default=1,
+                    help="emit fleet stats rows every k-th window (headless "
+                         "sweeps; per-window injected counts are "
+                         "accumulated across skipped windows)")
     ap.add_argument("--batch-windows", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None,

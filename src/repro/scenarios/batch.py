@@ -87,9 +87,12 @@ def init_batched_state(cfg: SimConfig, n_scenarios: int,
     return shard_over_fleet(batched, mesh)
 
 
-def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
-                       has_storm: bool = True):
-    """Single-scenario (unbatched) step; vmap adds the scenario axis.
+def make_scenario_advance(cfg: SimConfig, scheduler_names: Tuple[str, ...],
+                          has_storm: bool = True):
+    """Single-scenario (unbatched) stats-free transition; vmap adds the
+    scenario axis.  Returns ``(state, injected)`` — the per-window injected
+    SUBMIT count rides the carry so strided stats rows
+    (``cfg.stats_stride > 1``) can accumulate it across skipped windows.
 
     Scheduler dispatch exploits the shared structure of repro.sched:
     every scheduler is `base_pass` (constraint matching + pending top-k) ->
@@ -122,9 +125,8 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
         return finalize(state, cfg, pend_idx, valid, base_ok, pref,
                         dynamic_bestfit=dyn_table[idx])
 
-    def step(state: SimState, w: EventWindow, rng: jax.Array,
-             knobs: ScenarioKnobs
-             ) -> Tuple[SimState, Dict[str, jax.Array]]:
+    def advance(state: SimState, w: EventWindow, rng: jax.Array,
+                knobs: ScenarioKnobs) -> Tuple[SimState, jax.Array]:
         w = perturb.perturb_window(w, knobs, cfg, window=state.window)
         if cfg.inject_slots:
             injected = jnp.sum(w.kind[-cfg.inject_slots:]
@@ -146,7 +148,24 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
         state = dispatch(state, rng, knobs.sched_idx)
         if not cfg.incremental_accounting:
             state = eng.recompute_accounting(state, cfg)
-        state = state._replace(window=state.window + 1)
+        return state._replace(window=state.window + 1), injected
+
+    return advance
+
+
+def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
+                       has_storm: bool = True):
+    """Single-scenario (unbatched) step (advance + stats row); vmap adds the
+    scenario axis.  See :func:`make_scenario_advance` for the transition
+    semantics — this wrapper exists for unit tests and the stride-1 mental
+    model; ``run_scenarios`` composes the advance and the (vmapped) stats
+    emission itself so strided runs skip the stats work entirely."""
+    advance = make_scenario_advance(cfg, scheduler_names, has_storm)
+
+    def step(state: SimState, w: EventWindow, rng: jax.Array,
+             knobs: ScenarioKnobs
+             ) -> Tuple[SimState, Dict[str, jax.Array]]:
+        state, injected = advance(state, w, rng, knobs)
         stats = stats_mod.window_stats(state, cfg)
         stats["injected_arrivals"] = injected
         return state, stats
@@ -167,17 +186,47 @@ def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
     shared across scenarios (common random numbers — the right thing for
     paired what-if comparisons). ``has_storm=False`` statically drops the
     eviction-storm pass (only valid when every lane's storm_frac is 0).
+
+    With ``cfg.stats_stride == k > 1`` the scan emits one (B, ...) stats
+    row per k windows — same cadence and tail semantics as
+    ``engine.run_windows``, with the per-window ``injected_arrivals`` count
+    accumulated across each chunk so amplification lanes lose no events.
     """
-    step = make_scenario_step(cfg, scheduler_names, has_storm)
-    vstep = jax.vmap(step, in_axes=(0, None, None, 0))
+    advance = make_scenario_advance(cfg, scheduler_names, has_storm)
+    vadv = jax.vmap(advance, in_axes=(0, None, None, 0))
+    vstats = jax.vmap(lambda s: stats_mod.window_stats(s, cfg))
+
+    def rows_for(s, injected):
+        stats = vstats(s)
+        stats["injected_arrivals"] = injected
+        return stats
+
     W = windows.kind.shape[0]
     keys = jax.random.split(jax.random.PRNGKey(seed), W)
+    stride = cfg.stats_stride
 
-    def body(s, xs):
-        w, k = xs
-        return vstep(s, w, k, knobs)
+    if stride == 1 or W == 0:     # W == 0: the empty scan handles it cleanly
+        def body(s, xs):
+            w, k = xs
+            s, injected = vadv(s, w, k, knobs)
+            return s, rows_for(s, injected)
 
-    return jax.lax.scan(body, state, (windows, keys))
+        return jax.lax.scan(body, state, (windows, keys))
+
+    B = jax.tree.leaves(state)[0].shape[0]
+
+    def chunk(s, xs):
+        def inner(carry, x2):
+            s2, acc = carry
+            w, k = x2
+            s2, injected = vadv(s2, w, k, knobs)
+            return (s2, acc + injected), None
+
+        (s, injected), _ = jax.lax.scan(inner, (s, jnp.zeros(B, jnp.int32)),
+                                        xs)
+        return s, rows_for(s, injected)
+
+    return eng.scan_strided(chunk, state, (windows, keys), W, stride)
 
 
 @functools.partial(jax.jit,

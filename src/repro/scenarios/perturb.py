@@ -35,8 +35,11 @@ Semantics of the knobs (see spec.ScenarioSpec for the user-facing docs):
   recycles (re-submits) its oldest injected tasks rather than overflowing.
 * priority surge: a hashed fraction of arriving tasks get surge_prio.
 * usage inflation: UPDATE_TASK_USED payloads are scaled.
-* eviction storm: each window, a hashed fraction of *running* tasks is
-  forcibly evicted back to pending (applied to state, not events).
+* eviction storm: each window, a hashed fraction of *running* tasks — up
+  to ``cfg.resolved_storm_max_victims``, a bounded-storm cap shared by
+  both accounting modes — is forcibly evicted back to pending (applied to
+  state, not events); under incremental accounting the debit rides a
+  victim-compacted O(V) scatter (see ``storm_debit``).
 * injected-task lifecycles: amplification clones get a synthesised REMOVE
   after a deterministic per-slot lifetime (``expire_injected``, applied to
   state like the storm), counted as completions — amplified lanes churn
@@ -250,15 +253,19 @@ def expire_injected(state: SimState, k: ScenarioKnobs, cfg: SimConfig
     return state
 
 
-def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:
-    """Per-window eviction storm: force a hashed fraction of running tasks
-    back to pending. The draw mixes the window counter with the task slot so
-    different windows hit different victims, yet reruns are reproducible.
+def storm_victims(state: SimState, k: ScenarioKnobs, cfg: SimConfig):
+    """This window's eviction-storm victims: ((T,) bool mask, running
+    victim-count cumsum or None).
 
-    Under incremental accounting the victims' contributions are debited
-    with a masked segment-sum (two passes — still cheaper than the three
-    full recomputes the delta path replaces); storm-free fleets skip this
-    entirely via the ``has_storm`` static flag in batch.py.
+    The draw mixes the window counter with the task slot so different
+    windows hit different victims, yet reruns are reproducible.  When
+    ``cfg.resolved_storm_max_victims < max_tasks`` the mask is capped to
+    the first V hits in slot order (a *bounded* storm) — the cap is part of
+    the storm's semantics, applied identically under both accounting modes,
+    so incremental and full runs always evict the same set.  The cumsum the
+    cap is derived from is returned too: it doubles as the victim
+    compactor's rank index in :func:`storm_debit` (uncapped configs skip it
+    and return None).
     """
     T = cfg.max_tasks
     slots = jnp.arange(T, dtype=jnp.uint32)
@@ -266,21 +273,67 @@ def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:
            + state.window.astype(jnp.uint32) * jnp.uint32(0x85EBCA77))
     hit = hash01(mix, _SALT_STORM, cfg) < k.storm_frac
     victim = (state.task_state == TASK_RUNNING) & hit
-    n = jnp.sum(victim).astype(jnp.int32)
-    node_reserved, node_used = state.node_reserved, state.node_used
-    if cfg.incremental_accounting:
-        # one fused pass: scatter cost is dominated by the T-row walk, not
-        # the value width, so req + usage debit together
+    if cfg.resolved_storm_max_victims >= T:
+        return victim, None
+    cum = jnp.cumsum(victim.astype(jnp.int32))
+    return victim & (cum <= cfg.resolved_storm_max_victims), cum
+
+
+def storm_debit(state: SimState, victim: jax.Array, cum, cfg: SimConfig
+                ) -> SimState:
+    """Debit the storm victims' req/usage contributions from the node
+    tallies (incremental accounting only).
+
+    With ``resolved_storm_max_victims < max_tasks`` the victim rows are
+    *compacted* first: ``searchsorted`` over the victim cumsum finds the
+    j-th victim's row for every compact slot j < V (a vectorised binary
+    search — crucially NOT a max_tasks-length scatter, whose per-row cost
+    is what makes the legacy masked segment-sum expensive), and the debit
+    becomes an O(V) gather + delta scatter.  Uncapped configs keep the
+    legacy fused masked segment-sum (the equivalence oracle for the
+    compacted path — see tests/test_window_stats.py).
+    """
+    T = cfg.max_tasks
+    V = cfg.resolved_storm_max_victims
+    ucols = jnp.array(ACCOUNTED_USAGE_COLS)
+    if cum is None:
+        # legacy: one fused masked segment-sum (req + usage debit together —
+        # the scatter cost is dominated by the T-row walk, not value width)
         R = state.task_req.shape[1]
-        ucols = state.task_usage[:, jnp.array(ACCOUNTED_USAGE_COLS)]
-        sub = segment_usage(state.task_node,
-                            jnp.concatenate([state.task_req, ucols], axis=1),
-                            victim, cfg.max_nodes,
+        vals = jnp.concatenate(
+            [state.task_req, state.task_usage[:, ucols]], axis=1)
+        sub = segment_usage(state.task_node, vals, victim, cfg.max_nodes,
                             use_kernel=cfg.use_kernels)
-        node_reserved = node_reserved - sub[:, :R]
-        node_used = node_used - sub[:, R:]
+        return state._replace(node_reserved=state.node_reserved - sub[:, :R],
+                              node_used=state.node_used - sub[:, R:])
+    # victim compaction: the (j+1)-th victim lives at the first row whose
+    # cumsum reaches j+1 (the inject_arrivals sampling trick); slots past
+    # the victim count are masked and their scatter rows dropped
+    vrows = jnp.searchsorted(cum, jnp.arange(1, V + 1, dtype=cum.dtype))
+    valid = jnp.arange(V) < jnp.minimum(cum[-1], V)
+    rows = jnp.minimum(vrows, T - 1)
+    vnode = jnp.where(valid, state.task_node[rows], cfg.max_nodes)
+    vreq = jnp.where(valid[:, None], state.task_req[rows], 0.0)
+    vuse = jnp.where(valid[:, None], state.task_usage[rows][:, ucols], 0.0)
+    return state._replace(
+        node_reserved=state.node_reserved.at[vnode].add(-vreq, mode="drop"),
+        node_used=state.node_used.at[vnode].add(-vuse, mode="drop"))
+
+
+def storm_evict(state: SimState, k: ScenarioKnobs, cfg: SimConfig) -> SimState:
+    """Per-window eviction storm: force a hashed fraction of running tasks
+    (up to ``cfg.resolved_storm_max_victims``) back to pending.
+
+    Under incremental accounting the victims' contributions are debited via
+    :func:`storm_debit` (victim-compacted O(V) delta scatter by default,
+    masked segment-sum when uncapped); storm-free fleets skip this entirely
+    via the ``has_storm`` static flag in batch.py.
+    """
+    victim, cum = storm_victims(state, k, cfg)
+    n = jnp.sum(victim).astype(jnp.int32)
+    if cfg.incremental_accounting:
+        state = storm_debit(state, victim, cum, cfg)
     return state._replace(
         task_state=jnp.where(victim, jnp.int8(TASK_PENDING), state.task_state),
         task_node=jnp.where(victim, -1, state.task_node),
-        node_reserved=node_reserved, node_used=node_used,
         evictions=state.evictions + n)

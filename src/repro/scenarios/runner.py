@@ -17,6 +17,16 @@ Two scaling paths ride on top of the vmapped program:
   stats, reports and snapshots.
 * :meth:`from_precompiled` feeds the fleet from a §V-A pre-compiled npz
   (core/precompile.py) — whole sweeps replay with zero parsing.
+
+Headless sweeps can decimate the stats stream (``cfg.stats_stride == k``,
+``whatif --stats-stride``): the fleet emits one (B, ...) row per k windows
+(per-window injected counts accumulated across each chunk, lane
+trajectories bitwise unchanged), ``stats_frame()`` arrays shrink
+accordingly, and ``stats_window_indices()`` maps each row back to its
+window. Counter and final-value report columns are unaffected (counters
+are cumulative and the final window is always reported), but *mean*
+columns (``pending_mean``, ``cpu_*_frac_mean`` and their deltas) become
+means over the decimated sample — compare sweeps at equal strides.
 """
 from __future__ import annotations
 

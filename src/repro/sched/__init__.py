@@ -20,7 +20,8 @@ laptop). A scheduler is just a *proposal* — a (P, N) preference matrix —
 between the two shared passes; see ``registry.register_scheduler`` for the
 plugin API and README "Scheduler registry" for a worked example.
 
-``repro.core.schedulers`` remains as a thin re-export shim for one release.
+(The ``repro.core.schedulers`` re-export shim that covered the PR 3
+extraction for one release has been removed — import from here.)
 """
 from repro.sched.base import NEG, base_pass, pending_batch
 from repro.sched.commit import finalize

@@ -25,9 +25,9 @@ scenario lanes (the fleet's ``lax.switch`` dispatch table is built from
 ``PROPOSERS``), the ``simulate``/``whatif`` CLIs, and benchmarks.
 
 ``SCHEDULERS`` / ``PROPOSERS`` / ``DYNAMIC_BESTFIT`` are *derived views* of
-the registry kept in sync by :func:`register_scheduler` — legacy code that
-imported the dicts from ``core.schedulers`` keeps working, and sees plugins
-registered after import because the dict objects are shared, not copied.
+the registry kept in sync by :func:`register_scheduler` — code that holds a
+reference to the dicts sees plugins registered after import because the
+dict objects are shared, not copied.
 """
 from __future__ import annotations
 

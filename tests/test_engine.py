@@ -12,7 +12,7 @@ from repro.config import REDUCED_SIM
 from repro.core import engine as eng
 from repro.core.events import (EventKind, HostEvent, REMOVE_REASON_EVICT,
                                pack_window, stack_windows)
-from repro.core.schedulers import get_scheduler
+from repro.sched import get_scheduler
 from repro.core.state import (TASK_PENDING, TASK_RUNNING, init_state,
                               validate_invariants)
 

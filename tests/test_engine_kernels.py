@@ -12,7 +12,7 @@ import pytest
 from repro.config import REDUCED_SIM
 from repro.core import engine as eng
 from repro.core.events import EventKind, HostEvent, pack_window, stack_windows
-from repro.core.schedulers import get_scheduler
+from repro.sched import get_scheduler
 from repro.core.state import SimState, init_state, validate_invariants
 
 

@@ -76,7 +76,7 @@ def test_fleet_lowers_on_production_style_mesh():
 def test_monitor_render_and_snapshot_watch():
     windows = _windows()
     from repro.core import engine as eng
-    from repro.core.schedulers import get_scheduler
+    from repro.sched import get_scheduler
     state, _ = eng.run_windows(init_state(CFG), windows, CFG,
                                get_scheduler("greedy"))
     text = monitor.render(state, CFG, windows_done=2)

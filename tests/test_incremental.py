@@ -154,7 +154,11 @@ def _assert_modes_equivalent(seed, scheduler, use_kernels=False,
 @pytest.mark.parametrize("scheduler", ALL_SCHEDULERS)
 def test_incremental_matches_full_all_schedulers(scheduler):
     """Bit-identical decisions + tallies for every registered scheduler."""
-    _assert_modes_equivalent(seed=hash(scheduler) % 1000, scheduler=scheduler)
+    # crc32, not hash(): str hash is per-process randomised (PR 2 removed it
+    # from AttrVocab for the same reason), so failures stay reproducible
+    import zlib
+    _assert_modes_equivalent(seed=zlib.crc32(scheduler.encode()) % 1000,
+                             scheduler=scheduler)
 
 
 @pytest.mark.parametrize("seed", range(4))

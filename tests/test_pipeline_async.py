@@ -161,6 +161,55 @@ def test_run_windows_jit_donates_state():
     assert not out.task_req.is_deleted()
 
 
+@pytest.mark.parametrize("stride", [2, 4, 5])
+def test_stats_frame_semantics_under_striding(stride, monkeypatch):
+    """Stats decimation through the driver: frame length is the emitted row
+    count (not windows_done), stats_window_indices() names each row's
+    window, the final window is always reported, and the loop still syncs
+    exactly once per run()."""
+    calls = []
+    real = jax.block_until_ready
+    monkeypatch.setattr(jax, "block_until_ready",
+                        lambda x: calls.append(1) or real(x))
+    cfg = dataclasses.replace(CFG, stats_stride=stride)
+    W = 14
+    sim = pipe.Simulation(cfg, iter(_windows(W, cfg=cfg)), batch_windows=4)
+    sim.run()
+    assert len(calls) == 1
+    assert sim.windows_done == W
+    # the driver rounds batch_windows up to a stride multiple, so full
+    # batches emit whole chunks and only the run's tail row is partial
+    batch = max(4, ((4 + stride - 1) // stride) * stride)
+    rows = 0
+    left = W
+    while left > 0:
+        w = min(batch, left)
+        rows += -(-w // stride)
+        left -= w
+    frame = sim.stats_frame()
+    assert frame["n_running"].shape == (rows,)
+    idx = sim.stats_window_indices()
+    assert idx.shape == (rows,)
+    assert idx[-1] == W                   # final state always reported
+    assert all(b - a >= 1 for a, b in zip(idx, idx[1:]))
+    # stride-1 reference: each strided row equals the stride-1 row at the
+    # same window position (cumulative counters lose nothing)
+    ref = pipe.Simulation(CFG, iter(_windows(W)), batch_windows=4)
+    ref.run()
+    rf = ref.stats_frame()
+    for k in ("n_running", "n_pending", "completions", "evictions",
+              "placements"):
+        np.testing.assert_array_equal(frame[k], rf[k][idx - 1], err_msg=k)
+
+
+def test_stats_window_indices_stride_one_is_identity():
+    sim = pipe.Simulation(CFG, iter(_windows(12)), batch_windows=4)
+    sim.run()
+    np.testing.assert_array_equal(sim.stats_window_indices(),
+                                  np.arange(1, 13))
+    assert sim.stats_frame()["n_running"].shape == (12,)
+
+
 def test_resync_fires_on_cadence():
     cfg = dataclasses.replace(CFG, resync_windows=8)
     sim = pipe.Simulation(cfg, iter(_windows(16, cfg=cfg)), batch_windows=4)

@@ -3,8 +3,8 @@
 A scheduler registered by name must be a first-class citizen everywhere a
 name is accepted — the single-trajectory engine, a ScenarioSpec lane of the
 vmapped fleet (lax.switch dispatch over registry proposals), and the CLI
-listing — and the legacy ``repro.core.schedulers`` shim must keep exposing
-the same live registry views.
+listing.  (The one-release ``repro.core.schedulers`` re-export shim from
+the PR 3 extraction has been removed — importing it must fail loudly.)
 """
 import jax
 import jax.numpy as jnp
@@ -110,18 +110,12 @@ def test_duplicate_name_rejected_unless_overwrite(pack_left):
     assert DYNAMIC_BESTFIT[pack_left]
 
 
-def test_shim_exposes_live_registry_views(pack_left):
-    """repro.core.schedulers must share the SAME dict objects, so plugins
-    registered after import are visible through the legacy module too."""
-    from repro.core import schedulers as shim
-    assert shim.SCHEDULERS is SCHEDULERS
-    assert shim.PROPOSERS is PROPOSERS
-    assert shim.DYNAMIC_BESTFIT is DYNAMIC_BESTFIT
-    assert pack_left in shim.SCHEDULERS
-    assert shim.get_scheduler(pack_left) is SCHEDULERS[pack_left]
-    # legacy underscore aliases still resolve
-    assert shim._base is shim.base_pass
-    assert shim._finalize is shim.finalize
+def test_legacy_shim_is_gone():
+    """The PR 3 ``repro.core.schedulers`` re-export shim promised one
+    release; it has been removed — a stale import must fail at import time
+    rather than silently diverge from the live registry."""
+    with pytest.raises(ImportError):
+        import repro.core.schedulers  # noqa: F401
 
 
 def test_describe_and_cli_listing(pack_left, capsys):

@@ -8,7 +8,7 @@ import pytest
 from repro.config import REDUCED_SIM
 from repro.core import engine as eng
 from repro.core.events import EventKind, HostEvent, pack_window, stack_windows
-from repro.core.schedulers import SCHEDULERS, get_scheduler
+from repro.sched import SCHEDULERS, get_scheduler
 from repro.core.state import TASK_RUNNING, init_state, validate_invariants
 
 CFG = REDUCED_SIM
