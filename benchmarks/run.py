@@ -9,7 +9,7 @@ import time
 
 def main() -> None:
     from benchmarks import (fig7_scaling, kernels_bench, roofline_bench,
-                            scenarios_bench, schedulers_bench,
+                            scenarios_bench, schedulers_bench, service_bench,
                             table2_features, throughput)
     suites = [
         ("table2_features", table2_features),   # paper Table II
@@ -19,6 +19,7 @@ def main() -> None:
         ("fig7_scaling", fig7_scaling),         # paper Fig. 7
         ("throughput", throughput),             # paper §IV/§VI claims
         ("roofline", roofline_bench),           # framework §Roofline
+        ("service", service_bench),             # what-if serving loop
     ]
     rows = []
     print("name,us_per_call,derived")

@@ -73,7 +73,7 @@ def main():
         sim.run(max_windows=args.windows // 2)
         snap = os.path.join(d, "mid.npz")
         save_snapshot(snap, sim.state, cfg, sim.windows_done)
-        state, cfg2, done = load_snapshot(snap)
+        state, cfg2, done, _extra = load_snapshot(snap)
         print(f"\nsnapshot at window {done} -> {os.path.getsize(snap)/2**20:.1f}"
               f" MiB; restored OK (cfg match: {cfg2 == cfg})")
 

@@ -75,7 +75,7 @@ def watch_snapshot(path: str, cfg_hint: Optional[SimConfig] = None,
             continue
         if m != last_mtime:
             last_mtime = m
-            state, cfg, done = load_snapshot(path)
+            state, cfg, done, _extra = load_snapshot(path)
             print("\033[2J\033[H" + render(state, cfg, done), flush=True)
             n += 1
         time.sleep(interval)

@@ -159,6 +159,24 @@ class WindowPrefetcher:
             yield dev
 
 
+def restored_resync_phase(windows_done: int, batch_windows: int,
+                          resync_windows: int) -> int:
+    """The ``_since_resync`` counter a from-zero driver holds after
+    ``windows_done`` windows of constant ``batch_windows``-sized batches.
+
+    Resumed runs (fleet ``restore``, service fork-point queries) seed their
+    counter with this so the periodic incremental-accounting resync fires at
+    the same absolute windows as the from-zero run they must match bitwise.
+    With constant batches of k windows the resync lands every
+    ``ceil(resync_windows / k) * k`` windows.
+    """
+    if not resync_windows:
+        return 0
+    k = max(1, batch_windows)
+    cadence = ((resync_windows + k - 1) // k) * k
+    return windows_done % cadence
+
+
 class WindowedDriver:
     """Shared drive loop: prefetcher -> jitted advance -> stats/pacing.
 

@@ -2,7 +2,7 @@
 persisted event tensors, then replay without any parsing overhead.
 
 ``precompile_trace`` runs the GCD parser once and serialises the packed
-EventWindow stack to an npz; ``replay_windows`` memory-maps it back. The
+EventWindow stack to an npz; ``replay_windows`` streams it back. The
 throughput benchmark compares parse-at-runtime (the paper's main design)
 against this pre-compiled replay (the paper predicted it would trade
 flexibility for speed — EXPERIMENTS.md §Fidelity quantifies the gain).
@@ -15,13 +15,25 @@ config instead of silently mis-simulating. Stacks written with
 ``cfg.inject_slots > 0`` are *slot-pool padded*: the last ``inject_slots``
 rows of every window are PAD, ready for on-device event injection, so a
 whole amplification sweep replays with zero parsing.
+
+Stacks are written in **window chunks** (``shard_windows`` windows per zip
+member) with a per-window row index and a per-member byte index embedded in
+the meta, so a window *sub-range* — ``replay_windows(start_window=W)`` or
+:func:`load_window_range` — decompresses only the chunks that overlap it
+instead of materialising the whole trace. That is the what-if service's
+fork-point fast path (start a query at window W without replaying from
+zero), and stands alone for ``whatif --replay --start-window``. Legacy
+single-member stacks (and ``shard_windows=0``) are still read, paying the
+full-array decompression they always did.
 """
 from __future__ import annotations
 
 import os
-from typing import Iterator, Optional
+import zipfile
+from typing import Iterator, List, Optional
 
 import numpy as np
+from numpy.lib import format as _npformat
 
 from repro.config import SimConfig
 from repro.core.events import EventWindow, stack_windows
@@ -33,22 +45,179 @@ _META_FIELDS = ("max_events_per_window", "inject_slots", "inject_task_slots",
                 "max_tasks", "max_nodes", "n_resources", "n_usage_stats",
                 "max_constraints", "window_us")
 
+DEFAULT_SHARD_WINDOWS = 64
+
+
+def _chunk_key(c: int, name: str) -> str:
+    return f"w/{c:05d}/{name}"
+
+
+def _append_byte_index(tmp: str):
+    """Embed each data member's (header_offset, compressed_size) span.
+
+    Appended as two extra members AFTER ``np.savez_compressed`` closed the
+    archive, because offsets only exist once the members are written. The
+    offsets point at the zip local-file headers, so an external reader can
+    range-request exactly one chunk's bytes out of a remote stack.
+    """
+    with zipfile.ZipFile(tmp) as zf:
+        infos = [(i.filename, i.header_offset, i.compress_size)
+                 for i in zf.infolist() if i.filename.startswith("w/")]
+    if not infos:                              # empty stack: nothing to index
+        return
+    names = np.asarray([n[:-len(".npy")] for n, _, _ in infos])
+    spans = np.asarray([[off, sz] for _, off, sz in infos], np.int64)
+    spans = spans.reshape(-1, 2)               # keep 2-D when empty
+    with zipfile.ZipFile(tmp, "a", zipfile.ZIP_DEFLATED) as zf:
+        for key, arr in (("meta/byte_index_names.npy", names),
+                         ("meta/byte_index.npy", spans)):
+            with zf.open(key, "w") as f:
+                _npformat.write_array(f, arr, allow_pickle=False)
+
 
 def precompile_trace(cfg: SimConfig, trace_dir: str, out_path: str,
-                     n_windows: int, start_us: int = 0) -> int:
+                     n_windows: int, start_us: int = 0,
+                     shard_windows: int = DEFAULT_SHARD_WINDOWS) -> int:
+    """Parse once, persist the packed window stack. Returns windows written.
+
+    ``shard_windows`` sets the chunking granularity of the row/byte index
+    (one zip member group per chunk); 0 writes the legacy single-member
+    layout (no sub-range loads, but still replayable).
+    """
     parser = GCDParser(cfg, trace_dir)
     windows = list(parser.packed_windows(n_windows, start_us=start_us))
     stacked = stack_windows(windows)
+    W = len(windows)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     meta = {f"meta/{name}": np.asarray(getattr(cfg, name), np.int64)
             for name in _META_FIELDS}
+    meta["meta/n_windows"] = np.asarray(W, np.int64)
+    if shard_windows:
+        starts = list(range(0, W, shard_windows)) + [W]
+        meta["meta/window_index"] = np.asarray(starts, np.int64)
+        data = {_chunk_key(c, name): getattr(stacked, name)[lo:hi]
+                for c, (lo, hi) in enumerate(zip(starts, starts[1:]))
+                for name in EventWindow._fields}
+    else:
+        data = {f"w/{name}": getattr(stacked, name)
+                for name in EventWindow._fields}
     tmp = out_path + ".tmp"
     with open(tmp, "wb") as f:
-        np.savez_compressed(f, **meta,
-                            **{f"w/{name}": getattr(stacked, name)
-                               for name in EventWindow._fields})
+        np.savez_compressed(f, **meta, **data)
+    _append_byte_index(tmp)
     os.replace(tmp, out_path)
-    return len(windows)
+    return W
+
+
+class _Layout:
+    """Resolved stack layout: chunk row starts (chunked) or None (flat)."""
+
+    def __init__(self, z):
+        if "meta/window_index" in z.files:
+            self.starts = np.asarray(z["meta/window_index"], np.int64)
+            self.n_windows = int(self.starts[-1])
+        else:
+            self.starts = None
+            self.n_windows = int(z["w/kind"].shape[0])
+
+    def pieces(self, z, lo: int, hi: int) -> Iterator[EventWindow]:
+        """Yield (w, ...) row runs covering [lo, hi), touching only the
+        chunks that overlap the range."""
+        if lo >= hi:
+            return
+        if self.starts is None:                # legacy flat stack
+            yield EventWindow(*[np.asarray(z[f"w/{name}"][lo:hi])
+                                for name in EventWindow._fields])
+            return
+        starts = self.starts
+        c0 = int(np.searchsorted(starts, lo, side="right")) - 1
+        for c in range(c0, len(starts) - 1):
+            clo, chi = int(starts[c]), int(starts[c + 1])
+            if clo >= hi:
+                break
+            a, b = max(lo, clo) - clo, min(hi, chi) - clo
+            yield EventWindow(*[np.asarray(z[_chunk_key(c, name)][a:b])
+                                for name in EventWindow._fields])
+
+
+def _rebatch(pieces: Iterator[EventWindow], batch: int
+             ) -> Iterator[EventWindow]:
+    """Regroup arbitrary row runs into exact ``batch``-row stacks (+ tail).
+
+    The batch size, not the chunking, decides the device-batch geometry —
+    so replay results are independent of the writer's ``shard_windows``.
+    """
+    buf: List[EventWindow] = []
+    have = 0
+    for p in pieces:
+        buf.append(p)
+        have += p.kind.shape[0]
+        while have >= batch:
+            out, taken, rest = [], 0, []
+            for q in buf:
+                need = batch - taken
+                k = q.kind.shape[0]
+                if need == 0:
+                    rest.append(q)
+                elif k <= need:
+                    out.append(q)
+                    taken += k
+                else:
+                    out.append(EventWindow(*[x[:need] for x in q]))
+                    rest.append(EventWindow(*[x[need:] for x in q]))
+                    taken += need
+            buf, have = rest, have - batch
+            if len(out) == 1:
+                yield out[0]
+            else:
+                yield EventWindow(*[np.concatenate(cols)
+                                    for cols in zip(*out)])
+    if buf:
+        if len(buf) == 1:
+            yield buf[0]
+        else:
+            yield EventWindow(*[np.concatenate(cols) for cols in zip(*buf)])
+
+
+def stack_n_windows(path: str) -> int:
+    """Total windows persisted in a pre-compiled stack."""
+    with np.load(path, mmap_mode="r") as z:
+        return _Layout(z).n_windows
+
+
+def replay_index(path: str) -> dict:
+    """The stack's row + byte index (None entries for legacy flat stacks).
+
+    ``chunk_starts``: int64 (n_chunks + 1,) row offsets — chunk c holds
+    windows [starts[c], starts[c+1]). ``members``: zip-member name ->
+    (header_offset, compressed_size) byte span inside the npz.
+    """
+    with np.load(path, mmap_mode="r") as z:
+        out = {"n_windows": _Layout(z).n_windows,
+               "chunk_starts": None, "members": None}
+        if "meta/window_index" in z.files:
+            out["chunk_starts"] = np.asarray(z["meta/window_index"], np.int64)
+        if "meta/byte_index" in z.files:
+            names = [str(s) for s in z["meta/byte_index_names"]]
+            spans = [tuple(int(v) for v in row) for row in z["meta/byte_index"]]
+            out["members"] = dict(zip(names, spans))
+    return out
+
+
+def load_window_range(path: str, lo: int, hi: int) -> EventWindow:
+    """One (hi-lo, ...) stacked EventWindow, decompressing only the chunks
+    that overlap [lo, hi) — the fork-point fast path."""
+    with np.load(path, mmap_mode="r") as z:
+        layout = _Layout(z)
+        if not 0 <= lo <= hi <= layout.n_windows:
+            raise ValueError(f"window range [{lo}, {hi}) outside the stack's "
+                             f"[0, {layout.n_windows})")
+        pieces = list(layout.pieces(z, lo, hi))
+    if len(pieces) == 1:
+        return pieces[0]
+    if not pieces:
+        raise ValueError("empty window range")
+    return EventWindow(*[np.concatenate(cols) for cols in zip(*pieces)])
 
 
 def validate_replay(path: str, cfg: SimConfig):
@@ -58,7 +227,7 @@ def validate_replay(path: str, cfg: SimConfig):
     both sides agree there is no injection slot pool.
     """
     with np.load(path, mmap_mode="r") as z:
-        has_meta = any(k.startswith("meta/") for k in z.files)
+        has_meta = any(k == f"meta/{_META_FIELDS[0]}" for k in z.files)
         mismatches = {}
         for name in _META_FIELDS:
             want = int(getattr(cfg, name))
@@ -86,7 +255,7 @@ def replay_config(path: str, cfg: SimConfig) -> SimConfig:
     """
     import dataclasses
     with np.load(path, mmap_mode="r") as z:
-        if not any(k.startswith("meta/") for k in z.files):
+        if not any(k == f"meta/{_META_FIELDS[0]}" for k in z.files):
             return dataclasses.replace(
                 cfg, max_events_per_window=int(z["w/kind"].shape[1]),
                 inject_slots=0, inject_task_slots=0)
@@ -95,18 +264,20 @@ def replay_config(path: str, cfg: SimConfig) -> SimConfig:
 
 
 def replay_windows(path: str, batch: int = 32,
-                   n_windows: Optional[int] = None) -> Iterator[EventWindow]:
-    """Stream batches straight from the persisted tensors (zero parsing),
-    optionally truncated to the first ``n_windows`` windows."""
+                   n_windows: Optional[int] = None,
+                   start_window: int = 0) -> Iterator[EventWindow]:
+    """Stream (batch, ...) stacks straight from the persisted tensors (zero
+    parsing), optionally truncated to ``n_windows`` windows starting at
+    ``start_window``. On a chunked stack only the chunks overlapping the
+    requested range are ever decompressed."""
+    if start_window < 0:
+        raise ValueError(f"start_window={start_window} must be >= 0")
     with np.load(path, mmap_mode="r") as z:
-        fields = {name: z[f"w/{name}"] for name in EventWindow._fields}
-        n = fields["kind"].shape[0]
-        if n_windows is not None:
-            n = min(n, n_windows)
-        for lo in range(0, n, batch):
-            hi = min(lo + batch, n)
-            yield EventWindow(*[np.asarray(fields[name][lo:hi])
-                                for name in EventWindow._fields])
+        layout = _Layout(z)
+        lo = min(start_window, layout.n_windows)
+        hi = layout.n_windows if n_windows is None else \
+            min(layout.n_windows, lo + n_windows)
+        yield from _rebatch(layout.pieces(z, lo, hi), batch)
 
 
 def replay_single_windows(path: str) -> Iterator[EventWindow]:

@@ -3,20 +3,35 @@ distributions; restoring "is not implemented yet" — here it is).
 
 A snapshot is the SimState pytree + config + progress counters, written with
 the same atomic npz writer the training checkpointer uses. Restoring yields a
-bit-identical state: resumed simulations produce identical stats (tested).
+bit-identical state: resumed simulations produce identical stats (tested,
+single-trajectory AND (B, ...)-stacked fleet lanes).
+
+Loading is *config-drift tolerant*: a snapshot written under an older or
+newer SimConfig schema still loads — unknown keys are filtered out (and
+surfaced in ``Snapshot.extra["dropped_cfg_keys"]``), missing keys take the
+current dataclass defaults. The caller-supplied ``extra`` metadata dict is
+returned as written (it used to be silently dropped).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import numpy as np
 
 from repro.config import SimConfig
 from repro.core.state import SimState
+
+
+class Snapshot(NamedTuple):
+    """What ``load_snapshot`` returns — unpacks as (state, cfg, done, extra)."""
+    state: SimState
+    cfg: SimConfig
+    windows_done: int
+    extra: dict
 
 
 def save_snapshot(path: str, state: SimState, cfg: SimConfig,
@@ -32,10 +47,25 @@ def save_snapshot(path: str, state: SimState, cfg: SimConfig,
     os.replace(tmp, path)                      # atomic publish
 
 
-def load_snapshot(path: str) -> Tuple[SimState, SimConfig, int]:
+def config_from_meta(cfg_meta: dict) -> "tuple[SimConfig, list]":
+    """A SimConfig from persisted metadata, tolerating schema drift.
+
+    Keys the current SimConfig doesn't know are dropped (and returned);
+    keys the snapshot predates fall back to the dataclass defaults.
+    """
+    known = {f.name for f in dataclasses.fields(SimConfig)}
+    dropped = sorted(set(cfg_meta) - known)
+    cfg = SimConfig(**{k: v for k, v in cfg_meta.items() if k in known})
+    return cfg, dropped
+
+
+def load_snapshot(path: str) -> Snapshot:
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"]))
         fields = {f: jax.numpy.asarray(z[f"state/{f}"])
                   for f in SimState._fields}
-    cfg = SimConfig(**meta["cfg"])
-    return SimState(**fields), cfg, int(meta["windows_done"])
+    cfg, dropped = config_from_meta(meta["cfg"])
+    extra = dict(meta.get("extra") or {})
+    if dropped:
+        extra["dropped_cfg_keys"] = dropped
+    return Snapshot(SimState(**fields), cfg, int(meta["windows_done"]), extra)

@@ -97,6 +97,14 @@ def build_specs(args):
 
 
 def main(argv=None):
+    import sys
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if "--serve" in argv:
+        # persistent serving mode: warm compiled fleets, micro-batched
+        # queries, fork points — its own flag set, in launch/serve_whatif.py
+        argv.remove("--serve")
+        from repro.launch.serve_whatif import main as serve_main
+        return serve_main(argv)
     ap = argparse.ArgumentParser(
         description="batched what-if scenario fleet over one trace")
     ap.add_argument("--trace-dir", default=None,
@@ -142,6 +150,10 @@ def main(argv=None):
     ap.add_argument("--replay", default=None,
                     help="feed the fleet from an existing pre-compiled npz "
                          "(zero parsing; overrides --trace-dir)")
+    ap.add_argument("--start-window", type=int, default=0,
+                    help="with --replay: skip into the stack and simulate "
+                         "from this window (chunked stacks only decompress "
+                         "the covered range)")
     ap.add_argument("--json", default=None, help="write full report here")
     ap.add_argument("--snapshot", default=None,
                     help="write a batched fleet snapshot here at the end")
@@ -200,8 +212,11 @@ def main(argv=None):
     if replay_path is not None:
         fleet = ScenarioFleet.from_precompiled(
             cfg, replay_path, specs, batch_windows=args.batch_windows,
-            seed=args.seed, mesh=mesh, n_windows=args.windows)
+            seed=args.seed, mesh=mesh, n_windows=args.windows,
+            start_window=args.start_window)
     else:
+        if args.start_window:
+            ap.error("--start-window needs --replay (a chunked stack)")
         parser = GCDParser(cfg, trace_dir)
         source = parser.packed_windows(args.windows, start_us=start)
         fleet = ScenarioFleet(cfg, source, specs,

@@ -91,19 +91,24 @@ class ScenarioFleet(WindowedDriver):
                          specs: Sequence[ScenarioSpec],
                          batch_windows: int = 32, seed: Optional[int] = None,
                          mesh: Optional[Mesh] = None,
-                         n_windows: Optional[int] = None) -> "ScenarioFleet":
+                         n_windows: Optional[int] = None,
+                         start_window: int = 0) -> "ScenarioFleet":
         """A fleet fed straight from a pre-compiled npz (zero parsing).
 
         The npz must have been written by ``precompile_trace`` under a
         shape-compatible config (same window geometry and slot-pool
         reservation) — validated against the npz's embedded metadata.
-        ``n_windows`` truncates the replay to the stack's first windows.
+        ``n_windows`` truncates the replay; ``start_window`` skips into the
+        stack (chunked stacks only decompress the covered range) — pair it
+        with :meth:`restore` of a snapshot taken at that window to resume a
+        fleet mid-trace.
         """
         from repro.core.precompile import replay_windows, validate_replay
         validate_replay(path, cfg)
         return cls(cfg,
                    replay_windows(path, batch=batch_windows,
-                                  n_windows=n_windows),
+                                  n_windows=n_windows,
+                                  start_window=start_window),
                    specs, batch_windows=batch_windows, seed=seed, mesh=mesh)
 
     @property
@@ -145,15 +150,28 @@ class ScenarioFleet(WindowedDriver):
 
     def save(self, path: str):
         """Snapshot the fleet: real (B, ...) lanes + scenario metadata (mesh
-        padding lanes are sliced off, so snapshots are mesh-portable)."""
+        padding lanes are sliced off, so snapshots are mesh-portable). The
+        full per-lane specs ride in ``extra`` so a later consumer (the
+        what-if service's fork-point store) can map a spec back to its
+        lane."""
+        import dataclasses
         state = jax.tree.map(lambda x: x[:self.n_scenarios], self.state)
         save_snapshot(path, state, self.cfg, self.windows_done,
                       extra={"scenario_names": self.names,
-                             "schedulers": [s.scheduler for s in self.specs]})
+                             "schedulers": [s.scheduler for s in self.specs],
+                             "specs": [dataclasses.asdict(s)
+                                       for s in self.specs]})
 
     def restore(self, path: str):
-        """Resume a fleet mid-trace from a batched snapshot."""
-        state, cfg, windows_done = load_snapshot(path)
+        """Resume a fleet mid-trace from a batched snapshot.
+
+        Feed the fleet a window source starting at the snapshot's window
+        (``from_precompiled(..., start_window=snapshot_window)``) and the
+        resumed run is bitwise identical to the uninterrupted one — the
+        per-batch RNG seeds key off ``windows_done`` and the resync cadence
+        is re-phased to the from-zero schedule (both tested).
+        """
+        state, cfg, windows_done, _extra = load_snapshot(path)
         lead = jax.tree.leaves(state)[0]
         if lead.shape[0] != self.n_scenarios:
             raise ValueError(
@@ -168,3 +186,7 @@ class ScenarioFleet(WindowedDriver):
                 lambda s, p: jnp.concatenate([s, p], 0), state, pad)
         self.state = batch_mod.shard_over_fleet(state, self.mesh)
         self.windows_done = windows_done
+        from repro.core.pipeline import restored_resync_phase
+        self._since_resync = restored_resync_phase(
+            windows_done, self.prefetcher.batch,
+            self.cfg.resync_windows if self.cfg.incremental_accounting else 0)

@@ -173,6 +173,29 @@ def build_knobs(specs: Sequence[ScenarioSpec]
     for s in specs:
         if s.scheduler not in sched_names:
             sched_names.append(s.scheduler)
+    return _stack_knobs(specs, tuple(sched_names)), tuple(sched_names)
+
+
+def build_knobs_for_table(specs: Sequence[ScenarioSpec],
+                          scheduler_names: Tuple[str, ...]) -> ScenarioKnobs:
+    """Knobs whose ``sched_idx`` indexes a FIXED dispatch table.
+
+    The what-if service compiles its fleet program once against a declared
+    scheduler table and serves every micro-batch through it — so the knob
+    builder must map each spec into *that* table instead of deriving a
+    per-batch one (which would recompile per scheduler combination).
+    """
+    if not specs:
+        raise ValueError("need at least one scenario")
+    missing = sorted({s.scheduler for s in specs} - set(scheduler_names))
+    if missing:
+        raise ValueError(f"schedulers {missing} not in the serving table "
+                         f"{list(scheduler_names)}")
+    return _stack_knobs(specs, tuple(scheduler_names))
+
+
+def _stack_knobs(specs: Sequence[ScenarioSpec],
+                 sched_names: Tuple[str, ...]) -> ScenarioKnobs:
     knobs = ScenarioKnobs(
         sched_idx=jnp.asarray([sched_names.index(s.scheduler) for s in specs],
                               jnp.int32),
@@ -188,4 +211,4 @@ def build_knobs(specs: Sequence[ScenarioSpec]
         storm_frac=jnp.asarray([s.evict_storm_frac for s in specs],
                                jnp.float32),
     )
-    return knobs, tuple(sched_names)
+    return knobs

@@ -1,0 +1,34 @@
+"""Persistent what-if serving (ROADMAP: "what-if-as-a-service").
+
+A :class:`WhatIfServer` keeps a compiled fleet program and the trace stack
+warm between queries, micro-batches compatible strangers into one vmapped
+launch, and serves fork-point queries from mid-trace fleet snapshots — so
+an interactive caller pays milliseconds per what-if instead of a cold CLI
+run's parse + compile + replay-from-zero.
+
+    from repro.service import WhatIfServer, WhatIfQuery
+    with WhatIfServer(cfg, "stack.npz", schedulers=("greedy", "first_fit"),
+                      max_lanes=8) as srv:
+        srv.build_fork_points(trunk_specs, every=32)
+        r = srv.query(WhatIfQuery(spec, n_windows=64, start_window=32))
+        print(r.row, r.total_s)
+
+CLI front end: ``python -m repro.launch.whatif --serve ...`` (or
+``python -m repro.launch.serve_whatif``).
+"""
+from repro.service.batcher import MicroBatcher, Ticket
+from repro.service.engine_cache import EngineCache
+from repro.service.forkpoint import ForkPointStore, build_fork_points
+from repro.service.metrics import ServiceMetrics
+from repro.service.protocol import (WhatIfQuery, WhatIfResult, decode_query,
+                                    decode_result, encode_query,
+                                    encode_result, spec_from_dict,
+                                    spec_to_dict)
+from repro.service.server import WhatIfServer
+
+__all__ = [
+    "EngineCache", "ForkPointStore", "MicroBatcher", "ServiceMetrics",
+    "Ticket", "WhatIfQuery", "WhatIfResult", "WhatIfServer",
+    "build_fork_points", "decode_query", "decode_result", "encode_query",
+    "encode_result", "spec_from_dict", "spec_to_dict",
+]

@@ -1,0 +1,177 @@
+"""Micro-batcher: coalesce stranger queries into one vmapped fleet launch.
+
+Callers submit :class:`WhatIfQuery` tickets to a queue; a single batcher
+thread drains it into per-``batch_key()`` buckets (queries can only share a
+launch when their (start_window, n_windows, seed) agree — lanes are
+independent under vmap but the window stream and RNG schedule are shared).
+A bucket launches when it holds ``max_lanes`` queries, or when its oldest
+ticket has waited ``max_wait_s`` — so a lone query pays at most the wait
+bound, and a burst of B strangers rides one compiled program.
+
+The executor is injected (``execute_fn(tickets) -> None``, filling each
+ticket's result) so the batcher is testable without a simulator behind it.
+Execution happens on the batcher thread itself: one device program runs at
+a time, which is the right throughput shape for a single-accelerator
+server and keeps the jit cache / donation story simple.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.service.metrics import ServiceMetrics
+from repro.service.protocol import WhatIfQuery, WhatIfResult
+
+
+class Ticket:
+    """One in-flight query: the request, a completion event, the slot the
+    executor writes the result into, and latency bookkeeping."""
+
+    def __init__(self, query: WhatIfQuery,
+                 metrics: Optional[ServiceMetrics] = None):
+        self.query = query
+        self.metrics = metrics
+        self.done = threading.Event()
+        self.result: Optional[WhatIfResult] = None
+        self.t_submit = time.time()
+        self.t_start = 0.0             # set when its batch launches
+
+    def finish(self, result: WhatIfResult):
+        now = time.time()
+        result.queue_s = (self.t_start or now) - self.t_submit
+        result.exec_s = now - (self.t_start or now)
+        result.total_s = now - self.t_submit
+        self.result = result
+        # record BEFORE waking waiters, so a caller reading metrics right
+        # after wait() returns always sees this query counted
+        if self.metrics is not None:
+            self.metrics.on_done(result.total_s, result.ok())
+        self.done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> WhatIfResult:
+        if not self.done.wait(timeout):
+            raise TimeoutError(
+                f"query {self.query.spec.name!r} still pending after "
+                f"{timeout}s")
+        return self.result
+
+
+class MicroBatcher:
+
+    def __init__(self, execute_fn: Callable[[List[Ticket]], None],
+                 max_lanes: int = 8, max_wait_s: float = 0.05,
+                 metrics: Optional[ServiceMetrics] = None):
+        if max_lanes < 1:
+            raise ValueError("max_lanes must be >= 1")
+        self._execute = execute_fn
+        self.max_lanes = max_lanes
+        self.max_wait_s = max_wait_s
+        self.metrics = metrics or ServiceMetrics()
+        self._q: "queue.Queue[Ticket]" = queue.Queue()
+        self._buckets: Dict[tuple, List[Ticket]] = {}
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        if self._thread is not None:
+            raise RuntimeError("batcher already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="whatif-batcher")
+        self._thread.start()
+
+    def stop(self, drain: bool = True):
+        """Stop the batcher thread; with ``drain`` (default) every already
+        submitted ticket is still executed before the thread exits."""
+        if self._thread is None:
+            return
+        self._drain_on_stop = drain
+        self._stop.set()
+        self._q.put(None)              # wake the blocking get
+        self._thread.join()
+        self._thread = None
+
+    def submit(self, query: WhatIfQuery) -> Ticket:
+        if self._thread is None:
+            raise RuntimeError("batcher not started")
+        t = Ticket(query, self.metrics)
+        self.metrics.on_submit()
+        self._q.put(t)
+        return t
+
+    # --- batcher thread ------------------------------------------------------
+
+    def _loop(self):
+        while True:
+            timeout = self._next_deadline()
+            try:
+                t = self._q.get(timeout=timeout)
+            except queue.Empty:
+                t = False                      # deadline tick, nothing new
+            if t:
+                self._buckets.setdefault(t.query.batch_key(), []).append(t)
+            # launch every full bucket, then any bucket past its wait bound
+            while self._launch_ready():
+                pass
+            if self._stop.is_set():
+                if getattr(self, "_drain_on_stop", True):
+                    while True:                # tickets raced in after stop
+                        try:
+                            t = self._q.get_nowait()
+                        except queue.Empty:
+                            break
+                        if t:
+                            self._buckets.setdefault(
+                                t.query.batch_key(), []).append(t)
+                    while self._launch_ready():
+                        pass
+                return
+
+    def _next_deadline(self) -> Optional[float]:
+        """Seconds until the oldest bucket ages out (None: queue is empty)."""
+        if not self._buckets:
+            return None
+        oldest = min(ts[0].t_submit for ts in self._buckets.values())
+        return max(0.0, oldest + self.max_wait_s - time.time())
+
+    def _launch_ready(self) -> bool:
+        """Launch one bucket if any is full, or aged past max_wait_s, or the
+        batcher is draining on stop. Returns whether one launched."""
+        now = time.time()
+        pick = None
+        for key, ts in self._buckets.items():
+            if len(ts) >= self.max_lanes:
+                pick = key
+                break
+            if self._stop.is_set() or now - ts[0].t_submit >= self.max_wait_s:
+                if pick is None or ts[0].t_submit < \
+                        self._buckets[pick][0].t_submit:
+                    pick = key
+        if pick is None:
+            return False
+        ts = self._buckets.pop(pick)
+        tickets, rest = ts[:self.max_lanes], ts[self.max_lanes:]
+        if rest:                     # bucket overfilled between gets — requeue
+            self._buckets[pick] = rest
+        for t in tickets:
+            t.t_start = time.time()
+        try:
+            self._execute(tickets)
+        except Exception as e:              # noqa: BLE001 — server boundary
+            for t in tickets:
+                if not t.done.is_set():
+                    q = t.query
+                    t.finish(WhatIfResult(
+                        name=q.spec.name, scheduler=q.spec.scheduler,
+                        start_window=q.start_window, n_windows=q.n_windows,
+                        row={}, error=f"{type(e).__name__}: {e}"))
+        for t in tickets:
+            if not t.done.is_set():
+                q = t.query
+                t.finish(WhatIfResult(
+                    name=q.spec.name, scheduler=q.spec.scheduler,
+                    start_window=q.start_window, n_windows=q.n_windows,
+                    row={}, error="executor returned without a result"))
+        return True

@@ -1,0 +1,86 @@
+"""Serving telemetry: counters + a latency reservoir, lock-guarded.
+
+One :class:`ServiceMetrics` instance is shared by the server's submit path,
+the batcher thread and the executor; ``snapshot()`` is the single read
+point (CLI ``--metrics`` printout, benchmark JSON, tests). Percentiles come
+from a bounded reservoir of recent query latencies, so a long-lived server
+doesn't grow a per-query list without bound.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+
+class ServiceMetrics:
+
+    def __init__(self, reservoir: int = 4096):
+        self._lock = threading.Lock()
+        self._reservoir = reservoir
+        self._lat: List[float] = []        # recent total query latencies (s)
+        self._t0 = time.time()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.batches = 0
+        self.lanes = 0                     # live lanes launched
+        self.padded_lanes = 0              # inert padding lanes launched
+        self.lane_windows = 0              # live lanes x windows simulated
+        self.queue_depth = 0               # gauge: tickets waiting or running
+
+    def on_submit(self):
+        with self._lock:
+            self.submitted += 1
+            self.queue_depth += 1
+
+    def on_batch(self, live: int, padded: int, n_windows: int):
+        with self._lock:
+            self.batches += 1
+            self.lanes += live
+            self.padded_lanes += padded
+            self.lane_windows += live * n_windows
+
+    def on_done(self, latency_s: float, ok: bool):
+        with self._lock:
+            if ok:
+                self.completed += 1
+            else:
+                self.failed += 1
+            self.queue_depth = max(0, self.queue_depth - 1)
+            self._lat.append(latency_s)
+            if len(self._lat) > self._reservoir:
+                del self._lat[:len(self._lat) - self._reservoir]
+
+    @staticmethod
+    def _pct(sorted_vals: List[float], q: float) -> float:
+        if not sorted_vals:
+            return 0.0
+        i = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+        return sorted_vals[i]
+
+    def snapshot(self) -> Dict:
+        """Consistent copy of every counter + derived rates/percentiles."""
+        with self._lock:
+            lat = sorted(self._lat)
+            elapsed = max(1e-9, time.time() - self._t0)
+            total_lanes = self.lanes + self.padded_lanes
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "batches": self.batches,
+                "lanes": self.lanes,
+                "padded_lanes": self.padded_lanes,
+                "lane_windows": self.lane_windows,
+                "queue_depth": self.queue_depth,
+                "uptime_s": elapsed,
+                "lanes_per_s": self.lanes / elapsed,
+                "lane_windows_per_s": self.lane_windows / elapsed,
+                "mean_batch_occupancy": (self.lanes / total_lanes
+                                         if total_lanes else 0.0),
+                "latency_p50_s": self._pct(lat, 0.50),
+                "latency_p90_s": self._pct(lat, 0.90),
+                "latency_p99_s": self._pct(lat, 0.99),
+                "latency_max_s": lat[-1] if lat else 0.0,
+            }

@@ -1,0 +1,120 @@
+"""Request/response protocol of the what-if service.
+
+A request is a :class:`WhatIfQuery` — one ScenarioSpec plus where in the
+trace to start (window 0, or a registered fork-point window) and how many
+windows to simulate. A response is a :class:`WhatIfResult` — the per-lane
+comparative report row (same numbers a direct ``whatif`` CLI run of the
+same spec produces), optional stats curves, and serving telemetry (queue /
+execution latency, which batch the query rode in).
+
+Both sides have JSON codecs (``encode_* / decode_*``) so the same protocol
+serves an in-process queue today and a socket transport later; the
+in-process server passes the dataclasses through untouched. Spec decoding
+is schema-drift tolerant the same way snapshot configs are: unknown spec
+fields from a newer client are dropped rather than crashing the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.scenarios.spec import ScenarioSpec
+
+
+def spec_to_dict(spec: ScenarioSpec) -> dict:
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(d: dict) -> ScenarioSpec:
+    """Rebuild a spec from wire/snapshot metadata, dropping unknown keys."""
+    known = {f.name for f in dataclasses.fields(ScenarioSpec)}
+    return ScenarioSpec(**{k: v for k, v in d.items() if k in known})
+
+
+def spec_key(spec: ScenarioSpec):
+    """Identity of a spec's *simulation behaviour* (the name is a label)."""
+    d = spec_to_dict(spec)
+    d.pop("name")
+    return tuple(sorted(d.items()))
+
+
+@dataclass(frozen=True)
+class WhatIfQuery:
+    """One scenario question: simulate ``spec`` over ``n_windows`` windows
+    starting at ``start_window`` (0, or a fork-point window — the spec must
+    then match one of the fork snapshot's lanes)."""
+    spec: ScenarioSpec
+    n_windows: int
+    start_window: int = 0
+    seed: int = 0
+    include_curves: bool = False
+
+    def __post_init__(self):
+        if self.n_windows < 1:
+            raise ValueError(f"n_windows={self.n_windows} must be >= 1")
+        if self.start_window < 0:
+            raise ValueError(f"start_window={self.start_window} must be >= 0")
+
+    def batch_key(self):
+        """Queries sharing this key may ride one vmapped launch: lanes are
+        independent but the window stream and RNG key schedule are shared,
+        so start/length/seed must agree."""
+        return (self.start_window, self.n_windows, self.seed)
+
+
+@dataclass
+class WhatIfResult:
+    """What each caller gets back. ``row`` is the scenario_report row;
+    ``frame`` the per-lane (rows, ...) stats arrays (in-process callers
+    only — JSON encoding keeps the compact ``curves`` instead)."""
+    name: str
+    scheduler: str
+    start_window: int
+    n_windows: int
+    row: Dict
+    curves: Optional[Dict] = None
+    frame: Optional[Dict[str, np.ndarray]] = None
+    queue_s: float = 0.0
+    exec_s: float = 0.0
+    total_s: float = 0.0
+    batch_lanes: int = 0          # live lanes in the launch that served this
+    batch_size: int = 0           # compiled lane count (incl. padding)
+    error: Optional[str] = None
+
+    def ok(self) -> bool:
+        return self.error is None
+
+
+# --- JSON wire codecs --------------------------------------------------------
+
+def encode_query(q: WhatIfQuery) -> str:
+    return json.dumps({"spec": spec_to_dict(q.spec),
+                       "n_windows": q.n_windows,
+                       "start_window": q.start_window,
+                       "seed": q.seed,
+                       "include_curves": q.include_curves})
+
+
+def decode_query(s: str) -> WhatIfQuery:
+    d = json.loads(s)
+    return WhatIfQuery(spec=spec_from_dict(d["spec"]),
+                       n_windows=int(d["n_windows"]),
+                       start_window=int(d.get("start_window", 0)),
+                       seed=int(d.get("seed", 0)),
+                       include_curves=bool(d.get("include_curves", False)))
+
+
+def encode_result(r: WhatIfResult) -> str:
+    d = dataclasses.asdict(r)
+    d.pop("frame")                 # raw device frames never cross the wire
+    return json.dumps(d)
+
+
+def decode_result(s: str) -> WhatIfResult:
+    d = json.loads(s)
+    d["frame"] = None
+    return WhatIfResult(**d)

@@ -1,0 +1,237 @@
+"""WhatIfServer — the persistent what-if serving loop.
+
+Owns one pre-compiled trace stack, one warm compiled fleet program of
+``max_lanes`` lanes, a micro-batcher, and (optionally) a fork-point store.
+Callers ``submit()`` :class:`WhatIfQuery` tickets; compatible strangers are
+coalesced into one vmapped launch, incompatible ones run in separate
+launches of the *same* compiled program (lane count is always padded to
+``max_lanes``, so the jit cache sees one (B, W) geometry).
+
+Equivalence contract (tested): a served query's report equals a direct
+``ScenarioFleet.from_precompiled`` run of the same spec under the same
+config — bitwise, including fork-point continuations — because the server
+replays the WindowedDriver schedule exactly: same ``batch_windows``
+chunking, chunk seeds ``query.seed + absolute_start_window``, the same
+incremental-accounting resync cadence (re-phased for fork starts via
+``restored_resync_phase``), and ``has_storm=True`` (a bitwise no-op at
+``storm_frac == 0``). Compare runs at equal ``cfg.stats_stride`` — mean
+report columns are means over the decimated sample.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SimConfig
+from repro.core.pipeline import restored_resync_phase
+from repro.core.precompile import replay_config, stack_n_windows
+from repro.scenarios import batch as batch_mod
+from repro.scenarios.report import scenario_report
+from repro.scenarios.spec import ScenarioSpec, build_knobs_for_table
+from repro.sched import SCHEDULERS
+from repro.service.batcher import MicroBatcher, Ticket
+from repro.service.engine_cache import EngineCache
+from repro.service.forkpoint import ForkPointStore, build_fork_points
+from repro.service.metrics import ServiceMetrics
+from repro.service.protocol import WhatIfQuery, WhatIfResult
+
+
+class WhatIfServer:
+
+    def __init__(self, cfg: SimConfig, replay_path: str,
+                 schedulers: Sequence[str] = ("greedy",),
+                 max_lanes: int = 8, max_wait_s: float = 0.05,
+                 batch_windows: int = 32, seed: int = 0,
+                 window_cache_chunks: int = 16):
+        # the stack's embedded geometry wins, exactly like `whatif --replay`
+        self.cfg = replay_config(replay_path, cfg)
+        self.replay_path = replay_path
+        unknown = sorted(set(schedulers) - set(SCHEDULERS))
+        if unknown:
+            raise ValueError(f"unknown schedulers {unknown}; "
+                             f"have {list(SCHEDULERS)}")
+        if not schedulers:
+            raise ValueError("need at least one scheduler in the table")
+        self.scheduler_names: Tuple[str, ...] = tuple(schedulers)
+        if self.cfg.stats_stride > 1:    # mirror WindowedDriver's rounding
+            k = self.cfg.stats_stride
+            batch_windows = ((batch_windows + k - 1) // k) * k
+        self.batch_windows = batch_windows
+        self.max_lanes = max_lanes
+        self.seed = seed
+        self.n_stack_windows = stack_n_windows(replay_path)
+        self.engines = EngineCache(self.cfg, window_cache_chunks)
+        self.forks = ForkPointStore()
+        self._fork_seed: Optional[int] = None
+        self.metrics = ServiceMetrics()
+        self._batcher = MicroBatcher(self._execute, max_lanes=max_lanes,
+                                     max_wait_s=max_wait_s,
+                                     metrics=self.metrics)
+        self._started = False
+
+    # --- lifecycle -----------------------------------------------------------
+
+    def start(self, warm: bool = True) -> "WhatIfServer":
+        """Start the batcher thread; by default also pay compilation now
+        (one throwaway launch) so the first query is served warm."""
+        self._batcher.start()
+        self._started = True
+        if warm:
+            self.engines.warm(self.max_lanes, self.batch_windows,
+                              self.scheduler_names)
+        return self
+
+    def stop(self, drain: bool = True):
+        self._batcher.stop(drain=drain)
+        self._started = False
+
+    def __enter__(self) -> "WhatIfServer":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # --- fork points ---------------------------------------------------------
+
+    def build_fork_points(self, specs: Sequence[ScenarioSpec], every: int,
+                          n_windows: Optional[int] = None) -> List[int]:
+        """Run the fork trunk: simulate ``specs`` from window 0 over the
+        stack (or its first ``n_windows``), snapshotting every ``every``
+        windows (must be a multiple of ``batch_windows``). Queries may then
+        start at any returned window, provided their spec matches a trunk
+        lane and their seed matches the server seed. Returns the windows."""
+        from repro.scenarios.runner import ScenarioFleet
+        fleet = ScenarioFleet.from_precompiled(
+            self.cfg, self.replay_path, specs,
+            batch_windows=self.batch_windows, seed=self.seed,
+            n_windows=n_windows)
+        build_fork_points(fleet, every, self.forks)
+        self._fork_seed = self.seed
+        return self.forks.windows
+
+    # --- query path ----------------------------------------------------------
+
+    def submit(self, query: WhatIfQuery) -> Ticket:
+        """Enqueue a query; returns a Ticket (``.wait()`` for the result).
+        Invalid queries come back as an already-finished error ticket
+        instead of poisoning a whole micro-batch."""
+        if not self._started:
+            raise RuntimeError("server not started")
+        err = self._validate(query)
+        if err is not None:
+            t = Ticket(query, self.metrics)
+            self.metrics.on_submit()
+            t.finish(self._error_result(query, err))
+            return t
+        return self._batcher.submit(query)
+
+    def query(self, query: WhatIfQuery,
+              timeout: Optional[float] = None) -> WhatIfResult:
+        """Blocking submit + wait."""
+        return self.submit(query).wait(timeout)
+
+    def _validate(self, q: WhatIfQuery) -> Optional[str]:
+        if q.spec.scheduler not in self.scheduler_names:
+            return (f"scheduler {q.spec.scheduler!r} not in the serving "
+                    f"table {list(self.scheduler_names)}")
+        if q.spec.arrival_rate > 1.0 and not self.cfg.inject_slots:
+            return ("arrival_rate > 1 needs an injection slot pool, but the "
+                    "stack was packed with inject_slots == 0")
+        if q.start_window + q.n_windows > self.n_stack_windows:
+            return (f"window range [{q.start_window}, "
+                    f"{q.start_window + q.n_windows}) outside the stack's "
+                    f"[0, {self.n_stack_windows})")
+        if q.start_window:
+            if q.start_window not in self.forks.windows:
+                return (f"no fork point at window {q.start_window}; "
+                        f"have {self.forks.windows}")
+            if q.seed != self._fork_seed:
+                return (f"fork-point queries must use the trunk seed "
+                        f"{self._fork_seed}, got {q.seed}")
+            try:
+                self.forks.lane_for(q.start_window, q.spec)
+            except KeyError as e:
+                return str(e)
+        return None
+
+    @staticmethod
+    def _error_result(q: WhatIfQuery, err: str) -> WhatIfResult:
+        return WhatIfResult(name=q.spec.name, scheduler=q.spec.scheduler,
+                            start_window=q.start_window,
+                            n_windows=q.n_windows, row={}, error=err)
+
+    # --- executor (batcher thread) -------------------------------------------
+
+    def _execute(self, tickets: List[Ticket]):
+        queries = [t.query for t in tickets]
+        S, N, seed = queries[0].batch_key()
+        live = len(queries)
+        B = self.max_lanes
+        lane_specs = [q.spec for q in queries]
+        # pad to the compiled lane count with inert identity lanes (results
+        # discarded — lanes are independent under vmap)
+        lane_specs += [ScenarioSpec(name=f"_pad{i}",
+                                    scheduler=self.scheduler_names[0])
+                       for i in range(B - live)]
+        knobs = build_knobs_for_table(lane_specs, self.scheduler_names)
+
+        if S == 0:
+            state = self.engines.fresh_lanes(B)
+        else:
+            lanes = [self.forks.lane_for(S, q.spec) for q in queries]
+            forked = self.forks.lane_state(S, lanes)
+            if live < B:
+                pad = self.engines.fresh_lanes(B - live)
+                state = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], 0), forked, pad)
+            else:
+                state = forked
+
+        resync_every = (self.cfg.resync_windows
+                        if self.cfg.incremental_accounting else 0)
+        since = restored_resync_phase(S, self.batch_windows, resync_every)
+        rows: List[Dict] = []
+        lo = S
+        while lo < S + N:
+            hi = min(S + N, lo + self.batch_windows)
+            windows = self.engines.window_chunk(self.replay_path, lo, hi)
+            state, stats = batch_mod.run_scenarios_jit(
+                state, windows, knobs, self.cfg, self.scheduler_names,
+                seed + lo, has_storm=True)
+            rows.append(stats)
+            if resync_every:
+                since += hi - lo
+                if since >= resync_every:
+                    state = batch_mod.resync_fleet_jit(state, self.cfg)
+                    since = 0
+            lo = hi
+        jax.block_until_ready(state)
+        del state                               # donated next launch anyway
+
+        frame = {k: np.concatenate([np.asarray(r[k]) for r in rows])
+                 for k in rows[0]}
+        self.metrics.on_batch(live, B - live, N)
+        for i, t in enumerate(tickets):
+            q = t.query
+            lane = {k: v[:, i:i + 1] for k, v in frame.items()}
+            rep = scenario_report([q.spec.name], lane, [q.spec.scheduler])
+            t.finish(WhatIfResult(
+                name=q.spec.name, scheduler=q.spec.scheduler,
+                start_window=S, n_windows=N,
+                row=rep["scenarios"][0],
+                curves=rep["curves"] if q.include_curves else None,
+                frame={k: np.asarray(v[:, i]) for k, v in frame.items()},
+                batch_lanes=live, batch_size=B))
+
+    # --- telemetry -----------------------------------------------------------
+
+    def stats(self) -> Dict:
+        out = self.metrics.snapshot()
+        out["window_cache"] = self.engines.cache_stats()
+        out["fork_windows"] = self.forks.windows
+        out["compiled_programs"] = len(self.engines.warmed)
+        return out

@@ -1,0 +1,126 @@
+"""Chunked pre-compiled stacks: window/byte index, sub-range loads,
+start_window replay, legacy flat-layout compatibility."""
+import os
+import tempfile
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core.events import EventWindow, stack_windows
+from repro.core.precompile import (load_window_range, precompile_trace,
+                                   replay_index, replay_windows,
+                                   stack_n_windows, validate_replay)
+from repro.core.tracegen import SHIFT_US, generate_trace
+from repro.parsers.gcd import GCDParser
+
+CFG = REDUCED_SIM
+START = SHIFT_US - CFG.window_us
+N = 25
+
+
+@pytest.fixture(scope="module")
+def stacks():
+    """One trace, persisted chunked (shard 8) and flat (legacy layout)."""
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=16, n_jobs=30, horizon_windows=N,
+                       seed=3, usage_period_us=10_000_000)
+        chunked = os.path.join(d, "chunked.npz")
+        flat = os.path.join(d, "flat.npz")
+        precompile_trace(CFG, d, chunked, N, start_us=START, shard_windows=8)
+        precompile_trace(CFG, d, flat, N, start_us=START, shard_windows=0)
+        parsed = stack_windows(
+            list(GCDParser(CFG, d).packed_windows(N, start_us=START)))
+        yield chunked, flat, parsed
+
+
+def _full(path, batch=32):
+    return stack_windows([w for b in replay_windows(path, batch=batch)
+                          for w in [EventWindow(*[np.asarray(x[i])
+                                                  for x in b])
+                                    for i in range(b.kind.shape[0])]])
+
+
+def test_chunked_roundtrip_matches_parser(stacks):
+    chunked, flat, parsed = stacks
+    for path in (chunked, flat):
+        validate_replay(path, CFG)
+        assert stack_n_windows(path) == N
+        got = _full(path)
+        for f in EventWindow._fields:
+            assert np.array_equal(getattr(got, f), getattr(parsed, f)), f
+
+
+def test_chunked_equals_flat_any_batch(stacks):
+    """Replay batching is independent of the writer's shard_windows."""
+    chunked, flat, _ = stacks
+    for batch in (1, 7, 8, 32):
+        a = list(replay_windows(chunked, batch=batch))
+        b = list(replay_windows(flat, batch=batch))
+        assert len(a) == len(b)
+        sizes = [x.kind.shape[0] for x in a]
+        assert sizes == [batch] * (N // batch) + \
+            ([N % batch] if N % batch else [])
+        for x, y in zip(a, b):
+            for f in EventWindow._fields:
+                assert np.array_equal(getattr(x, f), getattr(y, f)), f
+
+
+def test_load_window_range(stacks):
+    chunked, _, parsed = stacks
+    for lo, hi in ((0, 8), (5, 13), (7, 9), (16, 25), (0, 25), (24, 25)):
+        got = load_window_range(chunked, lo, hi)
+        assert got.kind.shape[0] == hi - lo
+        for f in EventWindow._fields:
+            assert np.array_equal(getattr(got, f),
+                                  getattr(parsed, f)[lo:hi]), (f, lo, hi)
+    with pytest.raises(ValueError):
+        load_window_range(chunked, 0, N + 1)
+    with pytest.raises(ValueError):
+        load_window_range(chunked, -1, 4)
+
+
+def test_start_window_replay_equals_skip(stacks):
+    chunked, _, parsed = stacks
+    got = _full_from(chunked, start=9, n=12)
+    for f in EventWindow._fields:
+        assert np.array_equal(getattr(got, f), getattr(parsed, f)[9:21]), f
+
+
+def _full_from(path, start, n):
+    pieces = list(replay_windows(path, batch=5, n_windows=n,
+                                 start_window=start))
+    return EventWindow(*[np.concatenate(cols) for cols in zip(*pieces)])
+
+
+def test_window_index_meta(stacks):
+    chunked, flat, _ = stacks
+    idx = replay_index(chunked)
+    assert idx["n_windows"] == N
+    assert list(idx["chunk_starts"]) == [0, 8, 16, 24, 25]
+    assert replay_index(flat)["chunk_starts"] is None
+
+
+def test_byte_index_matches_zip_truth(stacks):
+    """The embedded byte spans agree with the archive's real layout, so an
+    external reader could range-request exactly one chunk."""
+    chunked, _, _ = stacks
+    members = replay_index(chunked)["members"]
+    assert members
+    with zipfile.ZipFile(chunked) as zf:
+        real = {i.filename[:-len(".npy")]: (i.header_offset, i.compress_size)
+                for i in zf.infolist() if i.filename.startswith("w/")}
+    assert members == real
+    assert all(k.startswith("w/") for k in members)
+
+
+def test_fleet_from_precompiled_start_window(stacks):
+    """The runner-level fast path: a fleet fed from window W sees exactly
+    the suffix windows (state continuity is test_fleet_snapshot_resume_*)."""
+    chunked, _, parsed = stacks
+    from repro.scenarios import ScenarioFleet, ScenarioSpec
+    fleet = ScenarioFleet.from_precompiled(
+        CFG, chunked, [ScenarioSpec()], batch_windows=8, start_window=16)
+    fleet.run()
+    assert fleet.windows_done == N - 16

@@ -1,0 +1,264 @@
+"""What-if serving: protocol, micro-batching, engine cache, fork points.
+
+The load-bearing assertions are the equivalence ones: a served query's
+per-window stats frame (and report row) must be *bitwise* identical to the
+corresponding lane of a direct ScenarioFleet run — including fork-point
+continuations vs replay-from-zero."""
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core.precompile import precompile_trace, replay_config
+from repro.core.tracegen import SHIFT_US, generate_trace
+from repro.scenarios import ScenarioFleet, ScenarioSpec
+from repro.scenarios.report import scenario_report
+from repro.service import (MicroBatcher, ServiceMetrics, WhatIfQuery,
+                           WhatIfResult, WhatIfServer, decode_query,
+                           decode_result, encode_query, encode_result,
+                           spec_from_dict)
+
+BW = 16          # serving chunk size == fleet batch_windows everywhere here
+N_STACK = 64
+
+
+@pytest.fixture(scope="module")
+def stack():
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=16, n_jobs=40, horizon_windows=N_STACK,
+                       seed=5, usage_period_us=10_000_000)
+        path = os.path.join(d, "stack.npz")
+        precompile_trace(REDUCED_SIM, d, path, N_STACK,
+                         start_us=SHIFT_US - REDUCED_SIM.window_us,
+                         shard_windows=BW)
+        yield path
+
+
+@pytest.fixture(scope="module")
+def cfg(stack):
+    return replay_config(stack, REDUCED_SIM)
+
+
+@pytest.fixture(scope="module")
+def server(stack, cfg):
+    srv = WhatIfServer(cfg, stack, schedulers=("greedy", "first_fit"),
+                       max_lanes=4, max_wait_s=0.05, batch_windows=BW)
+    srv.start(warm=True)
+    srv.build_fork_points(
+        [ScenarioSpec(name="trunk/greedy", scheduler="greedy"),
+         ScenarioSpec(name="trunk/ff", scheduler="first_fit")], every=BW)
+    yield srv
+    srv.stop()
+
+
+def direct_fleet(cfg, stack, specs, n_windows):
+    fleet = ScenarioFleet.from_precompiled(cfg, stack, specs,
+                                           batch_windows=BW,
+                                           n_windows=n_windows)
+    fleet.run()
+    return fleet
+
+
+# --- protocol ----------------------------------------------------------------
+
+def test_protocol_roundtrip():
+    q = WhatIfQuery(ScenarioSpec(name="x", scheduler="greedy",
+                                 node_outage_frac=0.2),
+                    n_windows=8, start_window=16, seed=3,
+                    include_curves=True)
+    q2 = decode_query(encode_query(q))
+    assert q2 == q
+    r = WhatIfResult(name="x", scheduler="greedy", start_window=16,
+                     n_windows=8, row={"placements": 3}, total_s=0.5,
+                     batch_lanes=2, batch_size=4)
+    r2 = decode_result(encode_result(r))
+    assert r2.row == r.row and r2.ok() and r2.batch_lanes == 2
+
+
+def test_spec_from_dict_drops_unknown():
+    s = spec_from_dict({"name": "a", "scheduler": "greedy",
+                        "knob_from_the_future": 9})
+    assert s == ScenarioSpec(name="a")
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        WhatIfQuery(ScenarioSpec(), n_windows=0)
+    with pytest.raises(ValueError):
+        WhatIfQuery(ScenarioSpec(), n_windows=4, start_window=-1)
+
+
+# --- serving equivalence -----------------------------------------------------
+
+def test_single_query_matches_direct(server, cfg, stack):
+    spec = ScenarioSpec(name="q", scheduler="first_fit",
+                        node_outage_frac=0.25)
+    res = server.query(WhatIfQuery(spec, n_windows=32), timeout=300)
+    assert res.ok(), res.error
+    fleet = direct_fleet(cfg, stack, [spec], 32)
+    frame = fleet.stats_frame()
+    for k, v in res.frame.items():
+        assert np.array_equal(v, frame[k][:, 0]), k
+    want = fleet.report()["scenarios"][0]
+    assert res.row == want
+
+
+def test_three_concurrent_queries_match_direct(server, cfg, stack):
+    """The CI acceptance shape: one fork-point query + two from window 0,
+    submitted concurrently, each report matching a direct run."""
+    fork_w = BW
+    q_fork = WhatIfQuery(ScenarioSpec(name="cont", scheduler="greedy"),
+                         n_windows=32, start_window=fork_w)
+    q_a = WhatIfQuery(ScenarioSpec(name="a", scheduler="greedy",
+                                   capacity_scale=0.8), n_windows=32)
+    q_b = WhatIfQuery(ScenarioSpec(name="b", scheduler="first_fit",
+                                   usage_scale=1.5), n_windows=32)
+    tickets = [server.submit(q) for q in (q_fork, q_a, q_b)]
+    res_fork, res_a, res_b = [t.wait(timeout=300) for t in tickets]
+    assert all(r.ok() for r in (res_fork, res_a, res_b))
+
+    # window-0 queries: direct single-spec fleet runs
+    for q, r in ((q_a, res_a), (q_b, res_b)):
+        fleet = direct_fleet(cfg, stack, [q.spec], 32)
+        assert r.row == fleet.report()["scenarios"][0]
+
+    # fork query: bitwise vs the trunk lane of a replay-from-zero run
+    trunk = [ScenarioSpec(name="trunk/greedy", scheduler="greedy"),
+             ScenarioSpec(name="trunk/ff", scheduler="first_fit")]
+    fleet = direct_fleet(cfg, stack, trunk, fork_w + 32)
+    frame = fleet.stats_frame()
+    for k, v in res_fork.frame.items():
+        assert np.array_equal(v, frame[k][fork_w:, 0]), k
+    want = scenario_report(["cont"],
+                           {k: v[fork_w:, :1] for k, v in frame.items()},
+                           ["greedy"])["scenarios"][0]
+    assert res_fork.row == want
+
+
+def test_fork_point_bitwise_acceptance(server, cfg, stack):
+    """Fork at window 32, run 32 more — bitwise equal to windows [32, 64)
+    of the same lane replayed from zero (the ISSUE acceptance check)."""
+    spec = ScenarioSpec(name="late", scheduler="first_fit")
+    res = server.query(WhatIfQuery(spec, n_windows=32, start_window=32),
+                       timeout=300)
+    assert res.ok(), res.error
+    trunk = [ScenarioSpec(name="trunk/greedy", scheduler="greedy"),
+             ScenarioSpec(name="trunk/ff", scheduler="first_fit")]
+    fleet = direct_fleet(cfg, stack, trunk, 64)
+    frame = fleet.stats_frame()
+    for k, v in res.frame.items():
+        assert np.array_equal(v, frame[k][32:, 1]), k
+
+
+# --- micro-batching ----------------------------------------------------------
+
+def test_strangers_coalesce_into_one_launch(server):
+    before = server.metrics.snapshot()["batches"]
+    specs = [ScenarioSpec(name=f"s{i}", scheduler="greedy",
+                          capacity_scale=1.0 - 0.05 * i) for i in range(4)]
+    tickets = [server.submit(WhatIfQuery(s, n_windows=16)) for s in specs]
+    results = [t.wait(timeout=300) for t in tickets]
+    assert all(r.ok() for r in results)
+    # 4 strangers, max_lanes=4: they must have ridden ONE full launch
+    assert server.metrics.snapshot()["batches"] == before + 1
+    assert {r.batch_lanes for r in results} == {4}
+    assert {r.batch_size for r in results} == {4}
+
+
+def test_incompatible_keys_split_batches(server):
+    before = server.metrics.snapshot()["batches"]
+    t1 = server.submit(WhatIfQuery(ScenarioSpec(name="n16"), n_windows=16))
+    t2 = server.submit(WhatIfQuery(ScenarioSpec(name="n32"), n_windows=32))
+    r1, r2 = t1.wait(timeout=300), t2.wait(timeout=300)
+    assert r1.ok() and r2.ok()
+    assert r1.n_windows == 16 and r2.n_windows == 32
+    assert server.metrics.snapshot()["batches"] == before + 2
+
+
+def test_submit_time_errors(server):
+    def err_of(q):
+        r = server.query(q, timeout=60)
+        assert not r.ok()
+        return r.error
+
+    assert "serving table" in err_of(
+        WhatIfQuery(ScenarioSpec(scheduler="round_robin"), n_windows=8))
+    assert "injection slot pool" in err_of(
+        WhatIfQuery(ScenarioSpec(arrival_rate=2.0), n_windows=8))
+    assert "outside the stack" in err_of(
+        WhatIfQuery(ScenarioSpec(), n_windows=N_STACK + 1))
+    assert "no fork point" in err_of(
+        WhatIfQuery(ScenarioSpec(), n_windows=8, start_window=7))
+    assert "trunk seed" in err_of(
+        WhatIfQuery(ScenarioSpec(), n_windows=8, start_window=BW, seed=9))
+    assert "matches no fork lane" in err_of(
+        WhatIfQuery(ScenarioSpec(node_outage_frac=0.5), n_windows=8,
+                    start_window=BW))
+
+
+def test_metrics_and_cache_telemetry(server):
+    server.query(WhatIfQuery(ScenarioSpec(name="m1"), n_windows=16),
+                 timeout=300)
+    s = server.stats()
+    assert s["completed"] >= 1 and s["failed"] >= 1     # from the error test
+    assert s["queue_depth"] == 0
+    assert s["lanes_per_s"] > 0
+    assert 0 < s["mean_batch_occupancy"] <= 1
+    assert s["latency_p99_s"] >= s["latency_p50_s"] > 0
+    wc = s["window_cache"]
+    assert wc["hits"] > 0 and wc["misses"] > 0          # repeats hit the LRU
+    # every cadence multiple, incl. the stack end (a fork at the final
+    # window serves no continuation but costs one retained state)
+    assert s["fork_windows"] == [BW, 2 * BW, 3 * BW, 4 * BW]
+
+
+# --- units -------------------------------------------------------------------
+
+def test_engine_cache_lru(stack, cfg):
+    from repro.service import EngineCache
+    ec = EngineCache(cfg, window_cache_chunks=2)
+    ec.window_chunk(stack, 0, BW)
+    ec.window_chunk(stack, 0, BW)
+    assert ec.cache_stats() == {"hits": 1, "misses": 1, "cached_chunks": 1}
+    ec.window_chunk(stack, BW, 2 * BW)
+    ec.window_chunk(stack, 2 * BW, 3 * BW)     # evicts (0, BW)
+    assert ec.cache_stats()["cached_chunks"] == 2
+    ec.window_chunk(stack, 0, BW)              # miss again after eviction
+    assert ec.cache_stats()["misses"] == 4
+
+
+def test_batcher_without_simulator():
+    """The batcher is simulator-agnostic: a dummy executor sees coalesced
+    buckets, errors don't wedge waiters, stop() drains."""
+    launches = []
+
+    def execute(tickets):
+        launches.append(len(tickets))
+        for t in tickets:
+            if t.query.spec.name == "boom":
+                raise RuntimeError("kaboom")
+            t.finish(WhatIfResult(name=t.query.spec.name, scheduler="greedy",
+                                  start_window=0, n_windows=1, row={}))
+
+    mb = MicroBatcher(execute, max_lanes=3, max_wait_s=0.02,
+                      metrics=ServiceMetrics())
+    mb.start()
+    ts = [mb.submit(WhatIfQuery(ScenarioSpec(name=f"s{i}"), n_windows=1))
+          for i in range(3)]
+    for t in ts:
+        assert t.wait(timeout=10).ok()
+    assert launches[0] == 3                      # full bucket, one launch
+
+    t_err = mb.submit(WhatIfQuery(ScenarioSpec(name="boom"), n_windows=1))
+    r = t_err.wait(timeout=10)                   # aged partial bucket
+    assert not r.ok() and "kaboom" in r.error
+
+    t_last = mb.submit(WhatIfQuery(ScenarioSpec(name="tail"), n_windows=1))
+    mb.stop(drain=True)                          # drains without the wait
+    assert t_last.wait(timeout=10).ok()
+    m = mb.metrics.snapshot()
+    assert m["submitted"] == 5 and m["completed"] == 4 and m["failed"] == 1

@@ -41,8 +41,8 @@ def test_sim_snapshot_resume_equality():
         sim_b1.run(max_windows=30)
         snap = os.path.join(d, "snap.npz")
         save_snapshot(snap, sim_b1.state, CFG, sim_b1.windows_done)
-        state_r, cfg_r, done = load_snapshot(snap)
-        assert done == 30 and cfg_r == CFG
+        state_r, cfg_r, done, extra = load_snapshot(snap)
+        assert done == 30 and cfg_r == CFG and extra == {}
 
         # skip the first 30 windows of a fresh source, resume from snapshot
         src = windows()
@@ -58,6 +58,93 @@ def test_sim_snapshot_resume_equality():
                   "completions", "placements", "window"):
             assert np.array_equal(np.asarray(getattr(state_a, f)),
                                   np.asarray(getattr(state_b, f))), f
+
+
+def _doctor_meta(path, mutate):
+    """Rewrite a snapshot's __meta__ JSON in place (drift simulation)."""
+    import json
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+        meta = json.loads(str(z["__meta__"]))
+    mutate(meta)
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **arrays)
+
+
+def test_snapshot_cfg_drift_tolerance():
+    """Snapshots survive SimConfig schema drift both ways: unknown keys are
+    dropped (and surfaced), missing keys take the dataclass defaults."""
+    from repro.core.state import init_state
+    with tempfile.TemporaryDirectory() as d:
+        snap = os.path.join(d, "snap.npz")
+        save_snapshot(snap, init_state(CFG), CFG, 5)
+
+        def mutate(meta):
+            meta["cfg"]["from_the_future_flag"] = 7    # newer writer
+            del meta["cfg"]["sched_batch"]             # older writer
+
+        _doctor_meta(snap, mutate)
+        state, cfg, done, extra = load_snapshot(snap)
+        assert done == 5
+        assert extra["dropped_cfg_keys"] == ["from_the_future_flag"]
+        # the missing key fell back to the field default, the rest survived
+        assert cfg.sched_batch == type(CFG)().sched_batch
+        assert cfg.max_nodes == CFG.max_nodes
+
+
+def test_snapshot_extra_roundtrip():
+    from repro.core.state import init_state
+    with tempfile.TemporaryDirectory() as d:
+        snap = os.path.join(d, "snap.npz")
+        extra = {"scenario_names": ["a", "b"], "note": "trunk@32", "k": 3}
+        save_snapshot(snap, init_state(CFG), CFG, 0, extra=extra)
+        assert load_snapshot(snap).extra == extra
+
+
+def test_fleet_snapshot_resume_bitwise():
+    """B-lane fleet: run 10 windows, save, restore into a fresh fleet fed
+    from the stack's window 10, run on — final state and trailing stats
+    rows bitwise match the uninterrupted 30-window run."""
+    from repro.core.precompile import precompile_trace
+    from repro.scenarios import ScenarioFleet, expand_grid
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=16, n_jobs=30, horizon_windows=30,
+                       seed=11, usage_period_us=10_000_000)
+        stack = os.path.join(d, "stack.npz")
+        precompile_trace(CFG, d, stack, 30, start_us=START, shard_windows=10)
+        specs = expand_grid(scheduler=["greedy", "first_fit"],
+                            node_outage_frac=[0.0, 0.25])
+
+        fleet_a = ScenarioFleet.from_precompiled(CFG, stack, specs,
+                                                 batch_windows=10)
+        fleet_a.run()
+
+        fleet_b1 = ScenarioFleet.from_precompiled(CFG, stack, specs,
+                                                  batch_windows=10,
+                                                  n_windows=10)
+        fleet_b1.run()
+        snap = os.path.join(d, "fleet.npz")
+        fleet_b1.save(snap)
+
+        fleet_b2 = ScenarioFleet.from_precompiled(CFG, stack, specs,
+                                                  batch_windows=10,
+                                                  start_window=10)
+        fleet_b2.restore(snap)
+        assert fleet_b2.windows_done == 10
+        fleet_b2.run()
+        assert fleet_b2.windows_done == 30
+
+        from repro.core.state import SimState
+        for f in SimState._fields:
+            assert np.array_equal(
+                np.asarray(getattr(fleet_a.state, f)),
+                np.asarray(getattr(fleet_b2.state, f))), f
+        frame_a, frame_b = fleet_a.stats_frame(), fleet_b2.stats_frame()
+        for k in frame_a:
+            assert np.array_equal(frame_a[k][10:], frame_b[k]), k
+        # the snapshot's extra carries the full specs for fork-lane lookup
+        assert [s["name"] for s in load_snapshot(snap).extra["specs"]] == \
+            [s.name for s in specs]
 
 
 def _tree(seed=0):
