@@ -1,0 +1,198 @@
+"""Ingestion benchmark: streaming vs legacy pre-compile at paper geometry.
+
+Measures the two ``precompile_trace`` writers over the same GCD-schema
+trace slice (cell-A node fleet, time-sliced horizon):
+
+* **legacy** — materialise every window, stack, ``savez_compressed``
+  (peak host memory O(trace));
+* **streaming** — consume the parser generator one ``shard_windows``
+  chunk at a time (peak host memory O(chunk)).
+
+Each writer runs in its OWN subprocess so ``ru_maxrss`` is an honest
+per-writer peak: the children import only numpy + the parser/pre-compile
+modules (no jax), keeping the baseline interpreter footprint ~30 MB.
+Reported rows: windows/s for each writer, the peak-RSS ratio, and a
+bitwise-equality flag (the streaming writer's npz must be byte-identical
+to the legacy one).
+
+  PYTHONPATH=src:. python -m benchmarks.ingest_bench --quick --check
+  PYTHONPATH=src:. python -m benchmarks.ingest_bench --quick \
+      --json BENCH_ingest.json
+
+``--check`` exits non-zero unless outputs are bitwise equal AND the
+streaming writer's peak RSS is >= --min-rss-ratio (default 5) times
+smaller. ``run(rows)`` plugs into ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import resource
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# quick shape: cell-A arrival intensity, scaled-down fleet + horizon —
+# big enough that an O(trace) writer visibly dwarfs the O(chunk) one
+QUICK = dict(nodes=256, tasks=8_192, events=4_096, windows=768, shard=16)
+FULL = dict(nodes=12_500, tasks=262_144, events=8_192, windows=1_024,
+            shard=64)
+
+
+def _cfg(shape):
+    from repro.config import SimConfig
+    return SimConfig(max_nodes=shape["nodes"], max_tasks=shape["tasks"],
+                     max_events_per_window=shape["events"],
+                     sched_batch=256, n_attr_slots=8, max_constraints=4)
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for blk in iter(lambda: f.read(1 << 20), b""):
+            h.update(blk)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# child: one writer, one process, honest ru_maxrss
+# ---------------------------------------------------------------------------
+
+def _child(args) -> None:
+    from repro.core import precompile as pc
+    from repro.core.tracegen import SHIFT_US
+    shape = dict(nodes=args.nodes, tasks=args.tasks, events=args.events,
+                 windows=args.windows, shard=args.shard)
+    cfg = _cfg(shape)
+    t0 = time.perf_counter()
+    n = pc.precompile_trace(cfg, args.trace_dir, args.out, args.windows,
+                            start_us=SHIFT_US - cfg.window_us,
+                            shard_windows=args.shard,
+                            streaming=args.child == "streaming")
+    wall = time.perf_counter() - t0
+    print(json.dumps({
+        "mode": args.child, "n_windows": n, "wall_s": wall,
+        "ru_maxrss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+        "sha256": _sha256(args.out),
+    }))
+
+
+def _spawn(mode: str, trace_dir: str, out: str, shape) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    cmd = [sys.executable, "-m", "benchmarks.ingest_bench", "--child", mode,
+           "--trace-dir", trace_dir, "--out", out,
+           "--windows", str(shape["windows"]), "--shard", str(shape["shard"]),
+           "--nodes", str(shape["nodes"]), "--tasks", str(shape["tasks"]),
+           "--events", str(shape["events"])]
+    proc = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                          text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"{mode} writer failed:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# parent: generate once, race the writers, compare
+# ---------------------------------------------------------------------------
+
+def bench(shape, seed: int = 0) -> dict:
+    from repro.core.tracegen import generate_paper_scale_trace
+    with tempfile.TemporaryDirectory() as d:
+        trace_dir = os.path.join(d, "trace")
+        t0 = time.perf_counter()
+        summary = generate_paper_scale_trace(
+            trace_dir, horizon_windows=shape["windows"],
+            n_machines=shape["nodes"], seed=seed, gz=False,
+            usage_period_us=60_000_000)
+        gen_s = time.perf_counter() - t0
+        res = {m: _spawn(m, trace_dir, os.path.join(d, f"{m}.npz"), shape)
+               for m in ("legacy", "streaming")}
+    out = {
+        "shape": shape,
+        "trace": {"n_tasks": summary.n_tasks,
+                  "n_task_events": summary.n_task_events,
+                  "generate_s": round(gen_s, 2)},
+        "bitwise_equal": res["legacy"]["sha256"] == res["streaming"]["sha256"],
+    }
+    for m, r in res.items():
+        out[m] = {"windows_per_s": round(r["n_windows"] / r["wall_s"], 1),
+                  "wall_s": round(r["wall_s"], 2),
+                  "peak_rss_mb": round(r["ru_maxrss_kb"] / 1024.0, 1)}
+    out["rss_ratio"] = round(
+        res["legacy"]["ru_maxrss_kb"] / max(res["streaming"]["ru_maxrss_kb"], 1),
+        2)
+    return out
+
+
+def run(csv_rows) -> dict:
+    """benchmarks/run.py entry point (quick shape)."""
+    r = bench(QUICK)
+    W = r["shape"]["windows"]
+    for m in ("streaming", "legacy"):
+        csv_rows.append((f"ingest_{m}_windows_per_s",
+                         r[m]["wall_s"] * 1e6 / W, r[m]["windows_per_s"]))
+    csv_rows.append(("ingest_rss_ratio_legacy_over_streaming", 0.0,
+                     r["rss_ratio"]))
+    csv_rows.append(("ingest_bitwise_equal", 0.0,
+                     float(r["bitwise_equal"])))
+    return r
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="streaming vs legacy pre-compile ingestion benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="scaled-down shape (CI); default is a paper-cell "
+                         "slice (12.5K nodes, 1K windows)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless bitwise-equal and rss_ratio >= "
+                         "--min-rss-ratio")
+    ap.add_argument("--min-rss-ratio", type=float, default=5.0)
+    ap.add_argument("--json", default=None, help="write the report here")
+    ap.add_argument("--seed", type=int, default=0)
+    # child-mode plumbing (internal)
+    ap.add_argument("--child", choices=["legacy", "streaming"],
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--trace-dir", help=argparse.SUPPRESS)
+    ap.add_argument("--out", help=argparse.SUPPRESS)
+    ap.add_argument("--windows", type=int, help=argparse.SUPPRESS)
+    ap.add_argument("--shard", type=int, help=argparse.SUPPRESS)
+    ap.add_argument("--nodes", type=int, help=argparse.SUPPRESS)
+    ap.add_argument("--tasks", type=int, help=argparse.SUPPRESS)
+    ap.add_argument("--events", type=int, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    if args.child:
+        _child(args)
+        return
+
+    r = bench(QUICK if args.quick else FULL, seed=args.seed)
+    print(json.dumps(r, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"report -> {args.json}")
+    if args.check:
+        problems = []
+        if not r["bitwise_equal"]:
+            problems.append("streaming output is NOT bitwise-identical "
+                            "to the legacy writer")
+        if r["rss_ratio"] < args.min_rss_ratio:
+            problems.append(f"peak-RSS ratio {r['rss_ratio']} < "
+                            f"required {args.min_rss_ratio}")
+        if problems:
+            raise SystemExit("ingest_bench --check FAILED: "
+                             + "; ".join(problems))
+        print(f"check OK: bitwise-identical, streaming uses "
+              f"{r['rss_ratio']}x less peak RSS")
+
+
+if __name__ == "__main__":
+    main()

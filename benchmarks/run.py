@@ -8,9 +8,10 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig7_scaling, kernels_bench, roofline_bench,
-                            scenarios_bench, schedulers_bench, service_bench,
-                            table2_features, throughput)
+    from benchmarks import (fig7_scaling, ingest_bench, kernels_bench,
+                            roofline_bench, scenarios_bench,
+                            schedulers_bench, service_bench, table2_features,
+                            throughput)
     suites = [
         ("table2_features", table2_features),   # paper Table II
         ("kernels", kernels_bench),
@@ -18,6 +19,7 @@ def main() -> None:
         ("scenarios", scenarios_bench),         # batched what-if fleet
         ("fig7_scaling", fig7_scaling),         # paper Fig. 7
         ("throughput", throughput),             # paper §IV/§VI claims
+        ("ingest", ingest_bench),               # streaming vs legacy writer
         ("roofline", roofline_bench),           # framework §Roofline
         ("service", service_bench),             # what-if serving loop
     ]

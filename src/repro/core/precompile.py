@@ -1,8 +1,8 @@
 """§V-A alternative design, implemented: pre-process the trace once into
 persisted event tensors, then replay without any parsing overhead.
 
-``precompile_trace`` runs the GCD parser once and serialises the packed
-EventWindow stack to an npz; ``replay_windows`` streams it back. The
+``precompile_trace`` runs a trace-family parser once and serialises the
+packed EventWindow stack to an npz; ``replay_windows`` streams it back. The
 throughput benchmark compares parse-at-runtime (the paper's main design)
 against this pre-compiled replay (the paper predicted it would trade
 flexibility for speed — EXPERIMENTS.md §Fidelity quantifies the gain).
@@ -25,19 +25,38 @@ fork-point fast path (start a query at window W without replaying from
 zero), and stands alone for ``whatif --replay --start-window``. Legacy
 single-member stacks (and ``shard_windows=0``) are still read, paying the
 full-array decompression they always did.
+
+**The writer streams.** ``precompile_trace`` consumes ``packed_windows``
+as a generator, stacking and serialising one ``shard_windows``-sized chunk
+at a time, so peak host memory is O(shard_windows) — a month-long
+12.5K-node trace precompiles without ever residing in RAM. The emitted
+archive is **bitwise identical** to the legacy materialise-then-savez
+writer (kept behind ``streaming=False`` as the equivalence oracle and the
+ingest-benchmark baseline): same member order (meta, then chunk-major data,
+then the appended parse-stats + byte-index members), same npy headers, same
+zlib stream. The flat legacy layout (``shard_windows=0``) streams too, by
+spooling per-field raw bytes to temp files on disk (O(trace) disk, still
+O(chunk) RAM) before wrapping them in npy members.
+
+The parser's anomaly counters (``ParseStats``) are persisted into the
+stack's meta — at 12.5K-node scale a silent ``slot_overflow`` means dropped
+tasks and corrupt results, so :func:`stack_parse_stats` lets any replay
+consumer (and the CLIs) surface them long after the parse happened.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
+import shutil
+import tempfile
 import zipfile
-from typing import Iterator, List, Optional
+from typing import Iterable, Iterator, List, Optional
 
 import numpy as np
 from numpy.lib import format as _npformat
 
 from repro.config import SimConfig
-from repro.core.events import EventWindow, stack_windows
-from repro.parsers.gcd import GCDParser
+from repro.core.events import EventWindow, empty_window, stack_windows
 
 # config fields that must match between the writer and the consumer for the
 # tensor layout (and the injection slot-pool contract) to line up
@@ -47,16 +66,43 @@ _META_FIELDS = ("max_events_per_window", "inject_slots", "inject_task_slots",
 
 DEFAULT_SHARD_WINDOWS = 64
 
+# ParseStats fields persisted into the stack meta (order is the archive
+# contract; readers key by the names member, so appending is safe)
+_PARSE_STAT_FIELDS = ("rows", "bad_rows", "usage_unknown_task",
+                      "dup_terminal", "constraints_dead_task",
+                      "slot_overflow", "attr_overflow")
+
 
 def _chunk_key(c: int, name: str) -> str:
     return f"w/{c:05d}/{name}"
 
 
+def _write_member(zf: zipfile.ZipFile, key: str, arr: np.ndarray):
+    """One npz member, exactly as ``np.savez_compressed`` writes it."""
+    with zf.open(key + ".npy", "w", force_zip64=True) as fid:
+        _npformat.write_array(fid, np.asanyarray(arr), allow_pickle=False)
+
+
+def _append_parse_stats(tmp: str, stats):
+    """Persist the parser's anomaly counters into the stack meta.
+
+    Appended after the data members (the counters are only final once the
+    event stream is exhausted — which, for the streaming writer, is after
+    the last chunk went out). ``stats`` is a ParseStats-shaped object.
+    """
+    names = np.asarray(_PARSE_STAT_FIELDS)
+    vals = np.asarray([int(getattr(stats, f)) for f in _PARSE_STAT_FIELDS],
+                      np.int64)
+    with zipfile.ZipFile(tmp, "a", zipfile.ZIP_DEFLATED) as zf:
+        _write_member(zf, "meta/parse_stats_names", names)
+        _write_member(zf, "meta/parse_stats", vals)
+
+
 def _append_byte_index(tmp: str):
     """Embed each data member's (header_offset, compressed_size) span.
 
-    Appended as two extra members AFTER ``np.savez_compressed`` closed the
-    archive, because offsets only exist once the members are written. The
+    Appended as two extra members AFTER the archive's data members were
+    closed, because offsets only exist once the members are written. The
     offsets point at the zip local-file headers, so an external reader can
     range-request exactly one chunk's bytes out of a remote stack.
     """
@@ -69,44 +115,181 @@ def _append_byte_index(tmp: str):
     spans = np.asarray([[off, sz] for _, off, sz in infos], np.int64)
     spans = spans.reshape(-1, 2)               # keep 2-D when empty
     with zipfile.ZipFile(tmp, "a", zipfile.ZIP_DEFLATED) as zf:
-        for key, arr in (("meta/byte_index_names.npy", names),
-                         ("meta/byte_index.npy", spans)):
-            with zf.open(key, "w") as f:
-                _npformat.write_array(f, arr, allow_pickle=False)
+        for key, arr in (("meta/byte_index_names", names),
+                         ("meta/byte_index", spans)):
+            _write_member(zf, key, arr)
 
 
-def precompile_trace(cfg: SimConfig, trace_dir: str, out_path: str,
-                     n_windows: int, start_us: int = 0,
-                     shard_windows: int = DEFAULT_SHARD_WINDOWS) -> int:
-    """Parse once, persist the packed window stack. Returns windows written.
-
-    ``shard_windows`` sets the chunking granularity of the row/byte index
-    (one zip member group per chunk); 0 writes the legacy single-member
-    layout (no sub-range loads, but still replayable).
-    """
-    parser = GCDParser(cfg, trace_dir)
-    windows = list(parser.packed_windows(n_windows, start_us=start_us))
-    stacked = stack_windows(windows)
-    W = len(windows)
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+def _build_meta(cfg: SimConfig, W: int, shard_windows: int) -> dict:
     meta = {f"meta/{name}": np.asarray(getattr(cfg, name), np.int64)
             for name in _META_FIELDS}
     meta["meta/n_windows"] = np.asarray(W, np.int64)
     if shard_windows:
         starts = list(range(0, W, shard_windows)) + [W]
         meta["meta/window_index"] = np.asarray(starts, np.int64)
+    return meta
+
+
+def _chunked(stream: Iterable[EventWindow], size: int
+             ) -> Iterator[List[EventWindow]]:
+    buf: List[EventWindow] = []
+    for w in stream:
+        buf.append(w)
+        if len(buf) == size:
+            yield buf
+            buf = []
+    if buf:
+        yield buf
+
+
+def _write_stack_streaming(tmp: str, cfg: SimConfig,
+                           stream: Iterable[EventWindow], W: int,
+                           shard_windows: int):
+    """Write the npz holding at most one shard_windows chunk in RAM.
+
+    Member-for-member (and byte-for-byte) identical to
+    ``np.savez_compressed(f, **meta, **data)`` over the materialised stack:
+    meta members first (W is known up front — ``packed_windows`` pads to
+    exactly ``n_windows``), then the chunk members in chunk-major, field-
+    minor order, each serialised by the same ``format.write_array`` numpy's
+    ``_savez`` uses.
+    """
+    meta = _build_meta(cfg, W, shard_windows)
+    seen = 0
+    with zipfile.ZipFile(tmp, "w", zipfile.ZIP_DEFLATED,
+                         allowZip64=True) as zf:
+        for key, arr in meta.items():
+            _write_member(zf, key, arr)
+        if shard_windows:
+            for c, chunk in enumerate(_chunked(stream, shard_windows)):
+                stacked = stack_windows(chunk)
+                seen += len(chunk)
+                if seen > W:
+                    raise ValueError(f"stream produced more than the "
+                                     f"declared {W} windows")
+                for name in EventWindow._fields:
+                    _write_member(zf, _chunk_key(c, name),
+                                  getattr(stacked, name))
+        else:
+            seen = _write_flat_streaming(zf, cfg, stream, W)
+    if seen != W:
+        raise ValueError(f"stream produced {seen} windows, declared {W}")
+
+
+def _write_flat_streaming(zf: zipfile.ZipFile, cfg: SimConfig,
+                          stream: Iterable[EventWindow], W: int) -> int:
+    """Stream the legacy flat layout (one member per field spanning all W
+    windows). Zip members are sequential, so per-field bytes spool to temp
+    files on disk first — O(trace) disk, still O(chunk) host memory."""
+    spec = empty_window(cfg)                   # per-field dtype + tail shape
+    spool_dir = tempfile.mkdtemp(prefix="agocs_flat_")
+    try:
+        paths = {name: os.path.join(spool_dir, name + ".bin")
+                 for name in EventWindow._fields}
+        files = {name: open(p, "wb") for name, p in paths.items()}
+        seen = 0
+        try:
+            for chunk in _chunked(stream, DEFAULT_SHARD_WINDOWS):
+                stacked = stack_windows(chunk)
+                seen += len(chunk)
+                if seen > W:
+                    raise ValueError(f"stream produced more than the "
+                                     f"declared {W} windows")
+                for name in EventWindow._fields:
+                    files[name].write(
+                        np.ascontiguousarray(getattr(stacked, name))
+                        .tobytes())
+        finally:
+            for f in files.values():
+                f.close()
+        for name in EventWindow._fields:
+            field = getattr(spec, name)
+            shape = (W,) + field.shape
+            with zf.open(f"w/{name}.npy", "w", force_zip64=True) as fid:
+                _npformat._write_array_header(
+                    fid, {"descr": _npformat.dtype_to_descr(field.dtype),
+                          "fortran_order": False, "shape": shape})
+                with open(paths[name], "rb") as src:
+                    shutil.copyfileobj(src, fid, 1 << 20)
+        return seen
+    finally:
+        shutil.rmtree(spool_dir, ignore_errors=True)
+
+
+def _write_stack_legacy(tmp: str, cfg: SimConfig,
+                        stream: Iterable[EventWindow], W: int,
+                        shard_windows: int):
+    """The pre-streaming writer: materialise everything, one savez call.
+
+    Kept as the bitwise oracle for the streaming writer and as the
+    ingest benchmark's peak-RSS baseline — peak host memory is O(trace).
+    """
+    windows = list(stream)
+    if len(windows) != W:
+        raise ValueError(f"stream produced {len(windows)} windows, "
+                         f"declared {W}")
+    stacked = stack_windows(windows)
+    meta = _build_meta(cfg, W, shard_windows)
+    if shard_windows:
+        starts = list(range(0, W, shard_windows)) + [W]
         data = {_chunk_key(c, name): getattr(stacked, name)[lo:hi]
                 for c, (lo, hi) in enumerate(zip(starts, starts[1:]))
                 for name in EventWindow._fields}
     else:
         data = {f"w/{name}": getattr(stacked, name)
                 for name in EventWindow._fields}
-    tmp = out_path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez_compressed(f, **meta, **data)
-    _append_byte_index(tmp)
-    os.replace(tmp, out_path)
-    return W
+
+
+def precompile_stream(cfg: SimConfig, stream: Iterable[EventWindow],
+                      out_path: str, n_windows: int,
+                      shard_windows: int = DEFAULT_SHARD_WINDOWS,
+                      parse_stats=None, streaming: bool = True) -> int:
+    """Persist an EventWindow stream (exactly ``n_windows`` long) to npz.
+
+    ``streaming=True`` (default) holds one ``shard_windows`` chunk in RAM;
+    ``streaming=False`` is the legacy materialise-everything writer — both
+    produce bitwise-identical archives. ``parse_stats`` (a ParseStats) is
+    embedded into the meta after the stream is exhausted.
+    """
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    tmp = out_path + ".tmp"
+    try:
+        if streaming:
+            _write_stack_streaming(tmp, cfg, stream, n_windows,
+                                   shard_windows)
+        else:
+            _write_stack_legacy(tmp, cfg, stream, n_windows, shard_windows)
+        if parse_stats is not None:
+            _append_parse_stats(tmp, parse_stats)
+        _append_byte_index(tmp)
+        os.replace(tmp, out_path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return n_windows
+
+
+def precompile_trace(cfg: SimConfig, trace_dir: str, out_path: str,
+                     n_windows: int, start_us: int = 0,
+                     shard_windows: int = DEFAULT_SHARD_WINDOWS,
+                     family: str = "gcd", streaming: bool = True) -> int:
+    """Parse once, persist the packed window stack. Returns windows written.
+
+    ``shard_windows`` sets the chunking granularity of the row/byte index
+    (one zip member group per chunk); 0 writes the legacy single-member
+    layout (no sub-range loads, but still replayable). ``family`` selects
+    the trace parser from the registry (``gcd``, ``openb``, plugins). The
+    parse never materialises the trace: windows stream from the parser
+    straight into the archive, one chunk in RAM at a time.
+    """
+    from repro.parsers import get_parser
+    parser = get_parser(family)(cfg, trace_dir)
+    stream = parser.packed_windows(n_windows, start_us=start_us)
+    return precompile_stream(cfg, stream, out_path, n_windows,
+                             shard_windows=shard_windows,
+                             parse_stats=parser.stats, streaming=streaming)
 
 
 class _Layout:
@@ -185,6 +368,44 @@ def stack_n_windows(path: str) -> int:
         return _Layout(z).n_windows
 
 
+def stack_parse_stats(path: str) -> Optional[dict]:
+    """The ParseStats the stack was written under (None for old stacks).
+
+    At paper scale a non-zero ``slot_overflow`` means the parser silently
+    dropped tasks — every replay consumer should check, not just the
+    process that ran the parse.
+    """
+    with np.load(path, mmap_mode="r") as z:
+        if "meta/parse_stats" not in z.files:
+            return None
+        names = [str(s) for s in z["meta/parse_stats_names"]]
+        vals = [int(v) for v in z["meta/parse_stats"]]
+    return dict(zip(names, vals))
+
+
+def overflow_warning(stats) -> Optional[str]:
+    """A human warning when the parse dropped data, else None.
+
+    ``stats`` is a ParseStats or a :func:`stack_parse_stats` dict.
+    """
+    if stats is None:
+        return None
+    get = stats.get if isinstance(stats, dict) else \
+        lambda k, d=0: getattr(stats, k, d)
+    slot, attr = int(get("slot_overflow", 0)), int(get("attr_overflow", 0))
+    if not slot and not attr:
+        return None
+    parts = []
+    if slot:
+        parts.append(f"{slot} task/node rows dropped (slot_overflow) — "
+                     "results are missing load; raise max_tasks/max_nodes")
+    if attr:
+        parts.append(f"{attr} attribute names hashed into shared columns "
+                     "(attr_overflow) — constraints may alias; raise "
+                     "n_attr_slots")
+    return "WARNING: " + "; ".join(parts)
+
+
 def replay_index(path: str) -> dict:
     """The stack's row + byte index (None entries for legacy flat stacks).
 
@@ -253,7 +474,6 @@ def replay_config(path: str, cfg: SimConfig) -> SimConfig:
     guarantees ``validate_replay`` passes. Pre-metadata stacks are assumed
     to have been written without an injection pool.
     """
-    import dataclasses
     with np.load(path, mmap_mode="r") as z:
         if not any(k == f"meta/{_META_FIELDS[0]}" for k in z.files):
             return dataclasses.replace(
@@ -269,12 +489,30 @@ def replay_windows(path: str, batch: int = 32,
     """Stream (batch, ...) stacks straight from the persisted tensors (zero
     parsing), optionally truncated to ``n_windows`` windows starting at
     ``start_window``. On a chunked stack only the chunks overlapping the
-    requested range are ever decompressed."""
+    requested range are ever decompressed.
+
+    An out-of-range ``start_window`` raises ValueError (matching
+    :func:`load_window_range`) instead of silently yielding nothing — a
+    typo'd ``--start-window`` must not look like an empty trace. The check
+    is eager (this is a plain function returning a generator), so callers
+    that hand the stream to a prefetcher thread still fail on *their*
+    thread, at call time.
+    """
     if start_window < 0:
         raise ValueError(f"start_window={start_window} must be >= 0")
+    n = stack_n_windows(path)
+    if start_window >= n and not (start_window == 0 and n == 0):
+        raise ValueError(
+            f"start_window={start_window} outside the stack's "
+            f"[0, {n}) — nothing left to replay")
+    return _replay_iter(path, batch, n_windows, start_window)
+
+
+def _replay_iter(path: str, batch: int, n_windows: Optional[int],
+                 start_window: int) -> Iterator[EventWindow]:
     with np.load(path, mmap_mode="r") as z:
         layout = _Layout(z)
-        lo = min(start_window, layout.n_windows)
+        lo = start_window
         hi = layout.n_windows if n_windows is None else \
             min(layout.n_windows, lo + n_windows)
         yield from _rebatch(layout.pieces(z, lo, hi), batch)

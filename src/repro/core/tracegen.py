@@ -172,3 +172,37 @@ def generate_trace(out_dir: str, *, n_machines: int = 128, n_jobs: int = 200,
         n_machines=n_machines, n_jobs=n_jobs, n_tasks=n_tasks,
         n_task_events=len(task_rows), n_usage_records=len(usage_rows),
         n_machine_events=n_machine_events, horizon_us=horizon_us)
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale mode: cell A geometry (12.5K nodes, month-long horizon)
+# ---------------------------------------------------------------------------
+
+PAPER_CELL_MACHINES = 12_500         # cell A node count (paper §II)
+PAPER_JOBS_PER_HOUR = 550            # cell A's ~order-of-magnitude admit rate
+
+
+def generate_paper_scale_trace(out_dir: str, *,
+                               horizon_windows: Optional[int] = None,
+                               n_machines: int = PAPER_CELL_MACHINES,
+                               jobs_per_hour: int = PAPER_JOBS_PER_HOUR,
+                               window_us: int = 5_000_000, seed: int = 0,
+                               gz: bool = True, **kw) -> TraceSummary:
+    """GCD-schema synthesis at the paper's cell-A geometry.
+
+    The full month is ``repro.configs.agocs_full_cell.MONTH_WINDOWS``
+    (501,120 windows); pass a smaller ``horizon_windows`` for a
+    time-sliced cut of the *same* cell — the node fleet and arrival
+    intensity stay at paper scale, only the horizon shrinks, so
+    ingestion benchmarks on a slice extrapolate linearly to the month.
+    Job count derives from the admit rate so callers can't accidentally
+    decouple horizon and load.
+    """
+    from repro.configs.agocs_full_cell import MONTH_WINDOWS
+    if horizon_windows is None:
+        horizon_windows = MONTH_WINDOWS
+    sim_hours = horizon_windows * window_us / 1e6 / 3600.0
+    n_jobs = max(1, int(round(sim_hours * jobs_per_hour)))
+    return generate_trace(out_dir, n_machines=n_machines, n_jobs=n_jobs,
+                          horizon_windows=horizon_windows,
+                          window_us=window_us, seed=seed, gz=gz, **kw)

@@ -29,7 +29,7 @@ from repro.core import tracegen
 from repro.core.pipeline import Simulation
 from repro.core.snapshot import save_snapshot
 from repro.core.state import validate_invariants
-from repro.parsers.gcd import GCDParser
+from repro import parsers as trace_parsers
 
 
 def build_cfg(args) -> SimConfig:
@@ -58,6 +58,11 @@ def build_cfg(args) -> SimConfig:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace-dir", default=None)
+    ap.add_argument("--trace-family", default="gcd",
+                    help="trace parser family (see --list-families); "
+                         "synthetic traces are generated in this schema too")
+    ap.add_argument("--list-families", action="store_true",
+                    help="print the trace-parser registry and exit")
     ap.add_argument("--cell-a", action="store_true",
                     help="the paper's 12.5K-node Google cell configuration")
     ap.add_argument("--nodes", type=int, default=None)
@@ -87,6 +92,11 @@ def main(argv=None):
         from repro.sched import describe_schedulers
         print(describe_schedulers())
         raise SystemExit(0)
+    if args.list_families:
+        print(trace_parsers.describe_parsers())
+        raise SystemExit(0)
+    family = args.trace_family
+    parser_cls = trace_parsers.get_parser(family)      # fail fast on typos
 
     cfg = build_cfg(args)
     tmp = None
@@ -95,24 +105,36 @@ def main(argv=None):
         tmp = tempfile.TemporaryDirectory()
         trace_dir = tmp.name
         t0 = time.time()
-        summary = tracegen.generate_trace(
-            trace_dir, n_machines=cfg.max_nodes, n_jobs=args.jobs,
-            horizon_windows=args.windows, seed=args.seed,
-            usage_period_us=max(cfg.window_us * 4, 20_000_000))
-        print(f"generated GCD-schema trace: {summary} "
+        if family == "openb":
+            from repro.parsers.alibaba_openb import generate_openb_trace
+            summary = generate_openb_trace(
+                trace_dir, n_nodes=cfg.max_nodes, n_pods=args.jobs * 4,
+                horizon_s=int(args.windows * cfg.window_us / 1e6),
+                seed=args.seed)
+        else:
+            summary = tracegen.generate_trace(
+                trace_dir, n_machines=cfg.max_nodes, n_jobs=args.jobs,
+                horizon_windows=args.windows, seed=args.seed,
+                usage_period_us=max(cfg.window_us * 4, 20_000_000))
+        print(f"generated {family}-schema trace: {summary} "
               f"({time.time()-t0:.1f}s)")
 
-    start_us = tracegen.SHIFT_US - cfg.window_us
+    start_us = trace_parsers.default_start_us(family, cfg)
     t0 = time.time()
     if args.precompile:
         n = precompile_mod.precompile_trace(cfg, trace_dir, args.precompile,
-                                            args.windows, start_us=start_us)
+                                            args.windows, start_us=start_us,
+                                            family=family)
         print(f"pre-compiled {n} windows -> {args.precompile} "
               f"({time.time()-t0:.1f}s)")
+        warn = precompile_mod.overflow_warning(
+            precompile_mod.stack_parse_stats(args.precompile))
+        if warn:
+            print(warn)
         source = precompile_mod.replay_single_windows(args.precompile)
         parser = None
     else:
-        parser = GCDParser(cfg, trace_dir)
+        parser = parser_cls(cfg, trace_dir)
         source = parser.packed_windows(args.windows, start_us=start_us)
 
     sim = Simulation(cfg, source, scheduler=args.scheduler,
@@ -140,6 +162,9 @@ def main(argv=None):
     print("invariants:", problems or "OK")
     if parser is not None:
         print("parser:", parser.stats)
+        warn = precompile_mod.overflow_warning(parser.stats)
+        if warn:
+            print(warn)
     if args.snapshot:
         save_snapshot(args.snapshot, state, cfg, sim.windows_done)
         print(f"snapshot -> {args.snapshot}")

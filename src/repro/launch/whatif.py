@@ -40,8 +40,9 @@ import time
 from repro.config import SimConfig, REDUCED_SIM
 from repro.configs import get_sim_config
 from repro.core import tracegen
-from repro.core.precompile import precompile_trace
-from repro.parsers.gcd import GCDParser
+from repro.core.precompile import (overflow_warning, precompile_trace,
+                                   stack_parse_stats)
+from repro import parsers as trace_parsers
 from repro.scenarios import (ScenarioFleet, ScenarioSpec, expand_grid,
                              fleet_mesh, format_table)
 from repro.scenarios.report import to_json
@@ -108,7 +109,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser(
         description="batched what-if scenario fleet over one trace")
     ap.add_argument("--trace-dir", default=None,
-                    help="GCD-format trace dir (default: synthesise one)")
+                    help="trace dir in --trace-family's schema "
+                         "(default: synthesise one)")
+    ap.add_argument("--trace-family", default="gcd",
+                    help="trace parser family (see --list-families)")
+    ap.add_argument("--list-families", action="store_true",
+                    help="print the trace-parser registry and exit")
     ap.add_argument("--cell-a", action="store_true",
                     help="the paper's 12.5K-node cell configuration")
     ap.add_argument("--nodes", type=int, default=None)
@@ -163,6 +169,11 @@ def main(argv=None):
         from repro.sched import describe_schedulers
         print(describe_schedulers())
         raise SystemExit(0)
+    if args.list_families:
+        print(trace_parsers.describe_parsers())
+        raise SystemExit(0)
+    family = args.trace_family
+    parser_cls = trace_parsers.get_parser(family)      # fail fast on typos
 
     cfg = build_cfg(args)
     if args.replay:
@@ -192,24 +203,41 @@ def main(argv=None):
         tmp = tempfile.TemporaryDirectory()
         trace_dir = tmp.name
         t0 = time.time()
-        summary = tracegen.generate_trace(
-            trace_dir, n_machines=cfg.max_nodes, n_jobs=args.jobs,
-            horizon_windows=args.windows, seed=args.seed,
-            usage_period_us=max(cfg.window_us * 4, 20_000_000))
-        print(f"generated GCD-schema trace: {summary} ({time.time()-t0:.1f}s)")
+        if family == "openb":
+            from repro.parsers.alibaba_openb import generate_openb_trace
+            summary = generate_openb_trace(
+                trace_dir, n_nodes=cfg.max_nodes, n_pods=args.jobs * 4,
+                horizon_s=int(args.windows * cfg.window_us / 1e6),
+                seed=args.seed)
+        else:
+            summary = tracegen.generate_trace(
+                trace_dir, n_machines=cfg.max_nodes, n_jobs=args.jobs,
+                horizon_windows=args.windows, seed=args.seed,
+                usage_period_us=max(cfg.window_us * 4, 20_000_000))
+        print(f"generated {family}-schema trace: {summary} "
+              f"({time.time()-t0:.1f}s)")
 
-    start = tracegen.SHIFT_US - cfg.window_us
+    start = trace_parsers.default_start_us(family, cfg)
     replay_path = args.replay
     if args.precompile and replay_path is None:
         t0 = time.time()
         n = precompile_trace(cfg, trace_dir, args.precompile, args.windows,
-                             start_us=start)
+                             start_us=start, family=family)
         print(f"pre-compiled {n} windows -> {args.precompile} "
               f"({time.time()-t0:.1f}s)")
+        warn = overflow_warning(stack_parse_stats(args.precompile))
+        if warn:
+            print(warn)
         replay_path = args.precompile
 
     t0 = time.time()
     if replay_path is not None:
+        if args.start_window:
+            from repro.core.precompile import stack_n_windows
+            n_stack = stack_n_windows(replay_path)
+            if args.start_window < 0 or args.start_window >= n_stack:
+                ap.error(f"--start-window {args.start_window} is outside "
+                         f"the stack's [0, {n_stack})")
         fleet = ScenarioFleet.from_precompiled(
             cfg, replay_path, specs, batch_windows=args.batch_windows,
             seed=args.seed, mesh=mesh, n_windows=args.windows,
@@ -217,12 +245,16 @@ def main(argv=None):
     else:
         if args.start_window:
             ap.error("--start-window needs --replay (a chunked stack)")
-        parser = GCDParser(cfg, trace_dir)
+        parser = parser_cls(cfg, trace_dir)
         source = parser.packed_windows(args.windows, start_us=start)
         fleet = ScenarioFleet(cfg, source, specs,
                               batch_windows=args.batch_windows,
                               seed=args.seed, mesh=mesh)
     fleet.run()
+    if replay_path is None:
+        warn = overflow_warning(parser.stats)
+        if warn:
+            print(warn)
     wall = time.time() - t0
     sim_s = fleet.windows_done * cfg.window_us / 1e6
     print(f"simulated {fleet.windows_done} windows x {fleet.n_scenarios} "

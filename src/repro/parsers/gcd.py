@@ -12,23 +12,22 @@ demands the simulator "cope with data anomalies"): missing fields parse to
 defaults, usage rows for unknown tasks are dropped, duplicate terminal events
 are idempotent, constraint rows for dead tasks are ignored — each counted in
 ``ParseStats``.
+
+The windowing/packing machinery (and the id->slot allocators) live in
+``repro.parsers.base`` and are shared with the other trace families.
 """
 from __future__ import annotations
 
-import dataclasses
-import glob
-import gzip
 import heapq
-import os
-import zlib
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
-
-import numpy as np
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.config import SimConfig
-from repro.core.events import (EventKind, EventWindow, HostEvent,
-                               GCD_TASK_ACTION, OP_EQ, OP_GT, OP_LT, OP_NE,
-                               REMOVE_REASON_EVICT, pack_window)
+from repro.core.events import (EventKind, HostEvent, GCD_TASK_ACTION, OP_EQ,
+                               OP_GT, OP_LT, OP_NE, REMOVE_REASON_EVICT)
+from repro.parsers.base import (AttrVocab, ParseStats, SlotAllocator,
+                                TraceParser, field_float as _f,
+                                field_int as _i, iter_csv_table,
+                                open_maybe_gz as _open, register_parser)
 
 # GCD constraint op codes -> ours
 _GCD_OP = {0: OP_EQ, 1: OP_NE, 2: OP_LT, 3: OP_GT}
@@ -41,109 +40,13 @@ TABLES = ("machine_events", "machine_attributes", "task_events",
           "task_constraints", "task_usage", "job_events")
 
 
-@dataclasses.dataclass
-class ParseStats:
-    rows: int = 0
-    bad_rows: int = 0
-    usage_unknown_task: int = 0
-    dup_terminal: int = 0
-    constraints_dead_task: int = 0
-    slot_overflow: int = 0
-    attr_overflow: int = 0
-
-
-class SlotAllocator:
-    """Dense id <-> slot resolution with a free list (host side)."""
-
-    def __init__(self, capacity: int, stats: ParseStats):
-        self.capacity = capacity
-        self.map: Dict[Tuple, int] = {}
-        self.free = list(range(capacity - 1, -1, -1))
-        self.stats = stats
-
-    def acquire(self, key) -> Optional[int]:
-        s = self.map.get(key)
-        if s is not None:
-            return s
-        if not self.free:
-            self.stats.slot_overflow += 1
-            return None
-        s = self.free.pop()
-        self.map[key] = s
-        return s
-
-    def lookup(self, key) -> Optional[int]:
-        return self.map.get(key)
-
-    def release(self, key) -> Optional[int]:
-        s = self.map.pop(key, None)
-        if s is not None:
-            self.free.append(s)
-        return s
-
-
-class AttrVocab:
-    """Obfuscated attribute-name -> column-slot mapping (host side).
-
-    Hashes use crc32, NOT Python's ``hash`` — str hashing is randomised per
-    process (PYTHONHASHSEED), which made re-runs of the same trace simulate
-    slightly different worlds whenever attribute strings were non-numeric.
-    """
-
-    def __init__(self, n_slots: int, stats: ParseStats):
-        self.n = n_slots
-        self.map: Dict[str, int] = {}
-        self.stats = stats
-
-    def slot(self, name: str) -> int:
-        s = self.map.get(name)
-        if s is None:
-            if len(self.map) >= self.n:
-                self.stats.attr_overflow += 1
-                s = zlib.crc32(name.encode()) % self.n
-            else:
-                s = len(self.map)
-            self.map[name] = s
-        return s
-
-    @staticmethod
-    def value(v: str) -> int:
-        if v == "" or v is None:
-            return 1
-        try:
-            return int(v) & 0x7FFFFFFF
-        except ValueError:
-            return (zlib.crc32(v.encode()) & 0x7FFFFF) + 1
-
-
-def _open(path: str):
-    return gzip.open(path, "rt") if path.endswith(".gz") else open(path)
-
-
 def _iter_table(trace_dir: str, table: str) -> Iterator[List[str]]:
-    paths = sorted(glob.glob(os.path.join(trace_dir, f"{table}-*.csv*")))
-    for p in paths:
-        with _open(p) as f:
-            for line in f:
-                yield line.rstrip("\n").split(",")
+    return iter_csv_table(trace_dir, table)
 
 
-def _f(row: List[str], i: int, default: float = 0.0) -> float:
-    try:
-        return float(row[i]) if i < len(row) and row[i] != "" else default
-    except ValueError:
-        return default
-
-
-def _i(row: List[str], i: int, default: int = 0) -> int:
-    try:
-        return int(row[i]) if i < len(row) and row[i] != "" else default
-    except ValueError:
-        return default
-
-
-class GCDParser:
-    """Streams a GCD-schema trace directory into EventWindows.
+@register_parser("gcd")
+class GCDParser(TraceParser):
+    """Google Cluster Data v2 CSV directory (six sharded tables).
 
     Stage 1 (per-table generators ≈ the paper's parser actors): raw CSV rows
     tagged ``(timestamp, table_priority, row)`` — stateless, so lazy
@@ -154,17 +57,17 @@ class GCDParser:
     """
 
     def __init__(self, cfg: SimConfig, trace_dir: str):
-        self.cfg = cfg
-        self.dir = trace_dir
-        self.stats = ParseStats()
-        # real tasks only get slots below the injection pool, so on-device
-        # synthesised SUBMITs (cfg.inject_slots) never collide with trace ids
-        self.tasks = SlotAllocator(cfg.real_task_slots, self.stats)
-        self.nodes = SlotAllocator(cfg.max_nodes, self.stats)
-        self.attrs = AttrVocab(cfg.n_attr_slots, self.stats)
+        super().__init__(cfg, trace_dir)
         self.jobs: Dict[int, int] = {}
         self._alive: Dict[Tuple, bool] = {}
         self._cons: Dict[Tuple, List] = {}
+
+    @staticmethod
+    def default_start_us(cfg: SimConfig) -> int:
+        # pre-existing machines are declared during GCD's 10-minute shift;
+        # runs start one window before it (see core/tracegen.py)
+        from repro.core.tracegen import SHIFT_US
+        return SHIFT_US - cfg.window_us
 
     # --- stage 1: raw tagged rows (stateless) ---
 
@@ -274,7 +177,7 @@ class GCDParser:
         self.stats.bad_rows += 1
         return None
 
-    # --- merged stream -> windows ---
+    # --- merged stream ---
 
     def events(self) -> Iterator[HostEvent]:
         sources = [
@@ -289,34 +192,3 @@ class GCDParser:
             ev = self._resolve(table, row)
             if ev is not None:
                 yield ev
-
-    def windows(self, start_us: int = 0) -> Iterator[Tuple[int, List[HostEvent]]]:
-        """Bucket the merged stream into consecutive window indices."""
-        cur: List[HostEvent] = []
-        cur_w = 0
-        for ev in self.events():
-            w = max((ev.time_us - start_us), 0) // self.cfg.window_us
-            while w > cur_w:
-                yield cur_w, cur
-                cur, cur_w = [], cur_w + 1
-            cur.append(ev)
-        yield cur_w, cur
-
-    def packed_windows(self, n_windows: int, start_us: int = 0
-                       ) -> Iterator[EventWindow]:
-        """Fixed-shape EventWindows, splitting overlong windows (the E bound)."""
-        gen = self.windows(start_us)
-        produced = 0
-        for w_idx, evs in gen:
-            if produced >= n_windows:
-                break
-            E = self.cfg.events_per_window
-            chunks = [evs[i:i + E] for i in range(0, max(len(evs), 1), E)]
-            for ch in chunks:
-                if produced >= n_windows:
-                    break
-                yield pack_window(self.cfg, ch, w_idx)
-                produced += 1
-        while produced < n_windows:
-            yield pack_window(self.cfg, [], produced)
-            produced += 1

@@ -36,11 +36,24 @@ from repro.service.protocol import spec_key
 
 
 class ForkPointStore:
-    """window -> ((B, ...) state, lane specs), plus spec->lane lookup."""
+    """window -> ((B, ...) state, lane specs), plus spec->lane lookup.
 
-    def __init__(self):
+    ``max_points`` bounds the store's device footprint: each point pins a
+    full (B, ...) SimState on device, so an unbounded store under
+    refresh-on-advance (a trunk that keeps extending the fork frontier)
+    accumulates snapshots forever. When the cap is hit the *oldest* window
+    is evicted — from-zero queries (start_window 0) never consult the
+    store, so dropping old fork points only lengthens the replay suffix
+    for queries behind the frontier, never changes results. None keeps the
+    legacy unbounded behaviour.
+    """
+
+    def __init__(self, max_points: Optional[int] = None):
+        if max_points is not None and max_points < 1:
+            raise ValueError(f"max_points={max_points} must be >= 1")
         self._lock = threading.Lock()
         self._points: Dict[int, Tuple[SimState, List[ScenarioSpec]]] = {}
+        self.max_points = max_points
 
     def add(self, window: int, state: SimState,
             specs: Sequence[ScenarioSpec]):
@@ -50,6 +63,9 @@ class ForkPointStore:
                              f"{len(specs)} specs")
         with self._lock:
             self._points[int(window)] = (state, list(specs))
+            if self.max_points is not None:
+                while len(self._points) > self.max_points:
+                    del self._points[min(self._points)]
 
     @property
     def windows(self) -> List[int]:

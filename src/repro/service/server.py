@@ -46,7 +46,8 @@ class WhatIfServer:
                  schedulers: Sequence[str] = ("greedy",),
                  max_lanes: int = 8, max_wait_s: float = 0.05,
                  batch_windows: int = 32, seed: int = 0,
-                 window_cache_chunks: int = 16):
+                 window_cache_chunks: int = 16,
+                 max_fork_points: Optional[int] = None):
         # the stack's embedded geometry wins, exactly like `whatif --replay`
         self.cfg = replay_config(replay_path, cfg)
         self.replay_path = replay_path
@@ -65,7 +66,9 @@ class WhatIfServer:
         self.seed = seed
         self.n_stack_windows = stack_n_windows(replay_path)
         self.engines = EngineCache(self.cfg, window_cache_chunks)
-        self.forks = ForkPointStore()
+        # bounded: a long-lived trunk with refresh-on-advance must not pin
+        # (B, ...) device snapshots forever
+        self.forks = ForkPointStore(max_points=max_fork_points)
         self._fork_seed: Optional[int] = None
         self.metrics = ServiceMetrics()
         self._batcher = MicroBatcher(self._execute, max_lanes=max_lanes,
