@@ -76,6 +76,20 @@ STORM_SPECS = FLEET_SPECS[:6] + [
     ScenarioSpec(name="ff-storm", scheduler="first_fit",
                  evict_storm_frac=0.125),
 ]
+# dispatch benchmark fleet: mixed cheap heuristics + an expensive
+# metaheuristic. Under vmapped lax.switch EVERY lane pays for the SA
+# branch (vmap executes all switch branches on all lanes); switchless
+# proposal-table dispatch runs SA only over its two lanes
+SCHED_DISPATCH_SPECS = [
+    ScenarioSpec(name="g0"),
+    ScenarioSpec(name="sa0", scheduler="simulated_annealing"),
+    ScenarioSpec(name="rr0", scheduler="round_robin"),
+    ScenarioSpec(name="g1"),
+    ScenarioSpec(name="sa1", scheduler="simulated_annealing"),
+    ScenarioSpec(name="rr1", scheduler="round_robin"),
+    ScenarioSpec(name="g2"),
+    ScenarioSpec(name="rr2", scheduler="round_robin"),
+]
 
 
 def make_cfg(quick: bool) -> SimConfig:
@@ -312,6 +326,73 @@ def bench_storm_compaction(cfg_inc, windows, reps, specs):
     return out
 
 
+def bench_sched_dispatch(quick, reps):
+    """Scheduler dispatch strategy on a mixed greedy+SA+round_robin B=8
+    fleet at a *scheduling-bound* shape (small task table, large
+    sched_batch, so proposal cost dominates the window):
+
+    * ``switch`` — the vmapped ``lax.switch`` fallback. vmap lowers a
+      switch to "run every branch on every lane, select", so all 8 lanes
+      pay for the 64-step simulated-annealing body;
+    * ``switchless`` — proposal-table dispatch: each distinct proposal
+      family is evaluated once over its own lane sub-batch (SA runs on 2
+      lanes, not 8) and results are merged back by static lane order;
+    * ``fused_kernel`` — switchless with ``use_kernels=True``: table-form
+      built-ins commit through the fused ``sched_pass`` Pallas kernel
+      (interpret mode on CPU — timing informational there; the row exists
+      to pin bitwise equivalence of the kernel path at bench shapes).
+
+    Final fleet states are bitwise-compared across all three."""
+    from repro.sched import snapshot_dispatch
+    if quick:
+        cfg = SimConfig(max_nodes=64, max_tasks=4_096,
+                        max_events_per_window=256, sched_batch=128,
+                        n_attr_slots=8, max_constraints=4)
+        W = 24
+    else:
+        cfg = SimConfig(max_nodes=128, max_tasks=8_192,
+                        max_events_per_window=512, sched_batch=256,
+                        n_attr_slots=8, max_constraints=4)
+        W = 48
+    windows = jax.tree.map(jnp.asarray, stack_windows(build_windows(cfg, W)))
+    specs = SCHED_DISPATCH_SPECS
+    B = len(specs)
+    knobs, sched_names = build_knobs(specs)
+    table = snapshot_dispatch(sched_names)
+    lanes = tuple(sched_names.index(s.scheduler) for s in specs)
+    variants = {
+        "switch": (dataclasses.replace(cfg, sched_dispatch="switch"), None),
+        "switchless": (dataclasses.replace(cfg, sched_dispatch="table"),
+                       lanes),
+        "fused_kernel": (dataclasses.replace(cfg, sched_dispatch="table",
+                                             use_kernels=True), lanes),
+    }
+    finals = {}
+    out = {"fleet_B": B, "max_nodes": cfg.max_nodes,
+           "sched_batch": cfg.sched_batch, "windows": W,
+           "schedulers": sorted(set(s.scheduler for s in specs))}
+    for name, (c, ls) in variants.items():
+        def run():
+            s, st = batch_mod.run_scenarios_jit(
+                batch_mod.init_batched_state(c, B), windows, knobs, c,
+                sched_names, 0, has_storm=False, table=table,
+                lane_scheds=ls)
+            jax.block_until_ready(s)
+            return s
+        finals[name] = jax.tree.map(np.asarray, run())
+        out[f"windows_per_sec_{name}"] = W / _wall(lambda: run(), reps)
+    out["speedup_switchless"] = (out["windows_per_sec_switchless"]
+                                 / out["windows_per_sec_switch"])
+    out["speedup_fused_kernel"] = (out["windows_per_sec_fused_kernel"]
+                                   / out["windows_per_sec_switch"])
+    sw = jax.tree.leaves(finals["switch"])
+    for name in ("switchless", "fused_kernel"):
+        out[f"{name}_bitexact"] = bool(all(
+            np.array_equal(a, b, equal_nan=a.dtype.kind == "f")
+            for a, b in zip(sw, jax.tree.leaves(finals[name]))))
+    return out
+
+
 def bench_staging(cfg, window_list, reps):
     """Host-side restacking: preallocated staging ring vs np.stack."""
     batch = 32
@@ -361,7 +442,15 @@ def main(argv=None):
                          "baseline (or equivalence breaks)")
     ap.add_argument("--windows", type=int, default=None)
     ap.add_argument("--out", default=str(JSON_PATH))
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the jax backend (recorded under meta.backend "
+                         "so runs from different platforms never get "
+                         "compared silently)")
     args = ap.parse_args(argv)
+
+    from repro import env
+    env.set_platform(args.platform)
 
     cfg_inc = make_cfg(args.quick)
     # the "full" baseline is the PR-3-era engine: full segment-sum
@@ -395,6 +484,7 @@ def main(argv=None):
         "fleet_B8_storm": bench_fleet(cfg_inc, cfg_full, windows, reps,
                                       STORM_SPECS),
         "stats_path": bench_stats_path(cfg_inc, windows, reps),
+        "sched_dispatch": bench_sched_dispatch(args.quick, reps),
         "stride8": bench_stride(cfg_inc, windows, reps, FLEET_SPECS),
         "storm_compaction": bench_storm_compaction(cfg_inc, windows, reps,
                                                    STORM_SPECS),
@@ -416,6 +506,13 @@ def main(argv=None):
           f"{sp['windows_per_sec_fused_ref']:.1f} fused ref, "
           f"{sp['windows_per_sec_fused_kernel_all_kernels']:.1f} kernel "
           f"(rows bitwise={sp['rows_bitwise']})")
+    sd = result["sched_dispatch"]
+    print(f"sched_dispatch: {sd['windows_per_sec_switch']:.1f} w/s switch, "
+          f"{sd['windows_per_sec_switchless']:.1f} switchless "
+          f"({sd['speedup_switchless']:.2f}x), "
+          f"{sd['windows_per_sec_fused_kernel']:.1f} fused-kernel "
+          f"(bitexact: switchless={sd['switchless_bitexact']}, "
+          f"kernel={sd['fused_kernel_bitexact']})")
     st8 = result["stride8"]
     print(f"stride8: single {st8['single_speedup']:.2f}x, fleet "
           f"{st8['fleet_speedup']:.2f}x vs stride 1 "
@@ -436,6 +533,10 @@ def main(argv=None):
     if not result["stats_path"]["rows_bitwise"]:
         print("FAIL: stats rows differ across unfused/fused/kernel paths")
         ok = False
+    for name in ("switchless", "fused_kernel"):
+        if not result["sched_dispatch"][f"{name}_bitexact"]:
+            print(f"FAIL: {name} dispatch diverged from lax.switch")
+            ok = False
     if not result["stride8"]["single_state_bitexact"]:
         print("FAIL: stride-8 final state differs from stride 1")
         ok = False
@@ -443,6 +544,16 @@ def main(argv=None):
         print("FAIL: compacted storm debit diverged from masked segment-sum")
         ok = False
     if args.check:
+        # absolute floor (speedup ratios are machine-independent): the
+        # switchless dispatch win must hold, baseline or not
+        got_sd = result["sched_dispatch"]["speedup_switchless"]
+        if got_sd < 1.2:
+            print(f"FAIL: switchless dispatch speedup {got_sd:.2f}x below "
+                  "the 1.2x floor")
+            ok = False
+        else:
+            print(f"check sched_dispatch: switchless {got_sd:.2f}x "
+                  ">= 1.2x floor OK")
         if baseline is None:
             print(f"note: no committed baseline at {JSON_PATH}; "
                   "skipping regression gate")

@@ -117,6 +117,9 @@ def bench(shape, seed: int = 0) -> dict:
                for m in ("legacy", "streaming")}
     out = {
         "shape": shape,
+        # ingestion is pure host-side work (the children import no jax);
+        # the key exists so every BENCH_* report carries a backend field
+        "backend": "host",
         "trace": {"n_tasks": summary.n_tasks,
                   "n_task_events": summary.n_task_events,
                   "generate_s": round(gen_s, 2)},

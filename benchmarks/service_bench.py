@@ -199,7 +199,12 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--check", action="store_true",
                     help="fail on equivalence break or < 2x vs cold CLI")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the jax backend (recorded in meta.backend)")
     args = ap.parse_args()
+    from repro import env
+    env.set_platform(args.platform)
     out = bench(args.quick)
     print(json.dumps(out, indent=1, sort_keys=True))
     if not args.quick:

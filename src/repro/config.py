@@ -358,8 +358,35 @@ class SimConfig:
                                       # tasks at the top of the task table
                                       # (0 = auto-size from inject_slots);
                                       # injected slot ids wrap modulo the pool
+    sched_dispatch: str = "auto"      # fleet scheduler dispatch: 'auto' goes
+                                      # switchless (grouped proposal-table
+                                      # evaluation, no lax.switch) whenever
+                                      # every lane's scheduler registered a
+                                      # table form, falling back to the
+                                      # lax.switch path otherwise; 'switch'
+                                      # forces the fallback; 'table' demands
+                                      # switchless and errors if any lane's
+                                      # scheduler is opaque (no table form)
+    commit_tile_p: int = 0            # placement-commit task tile rows per
+                                      # grid step (0 = kernel default: whole
+                                      # batch under interpret, 128 on TPU)
+    commit_tile_n: int = 0            # node-streaming tile for the commit /
+                                      # fused scheduler pass: 0 keeps the
+                                      # node dim whole per grid step; k > 0
+                                      # streams (B, k) score blocks with a
+                                      # cross-tile argmax carry so the pass
+                                      # holds at full-cell node counts
+                                      # (N=12,500) without an HBM-resident
+                                      # (B, P, N) preference tensor
 
     def __post_init__(self):
+        if self.sched_dispatch not in ("auto", "switch", "table"):
+            raise ValueError(
+                f"sched_dispatch={self.sched_dispatch!r} not in "
+                "('auto', 'switch', 'table')")
+        if self.commit_tile_p < 0 or self.commit_tile_n < 0:
+            raise ValueError("commit_tile_p / commit_tile_n must be >= 0 "
+                             "(0 = kernel default / whole node dim)")
         if self.inject_slots < 0 or self.inject_task_slots < 0:
             raise ValueError("inject_slots / inject_task_slots must be >= 0")
         if self.resync_windows < 0:

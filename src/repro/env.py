@@ -1,0 +1,67 @@
+"""Computation-environment configuration: platform selection + XLA flag
+presets, shared by the CLIs (``simulate --platform``, ``whatif
+--platform``) and the benchmark drivers.
+
+All of these only take effect at the very start of a program — before jax
+initialises its backend — so the CLIs call them first thing in ``main()``,
+ahead of any jnp import side effects. The simulator itself is
+platform-agnostic (pure JAX + interpret-mode Pallas on CPU, compiled
+kernels on TPU); these helpers are the one place backend choice lives, and
+the BENCH_* writers record :func:`backend` next to their numbers so runs
+from different platforms never get compared silently.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# flags appended to XLA_FLAGS when a GPU platform is selected — the
+# standard performance set (async collectives + latency-hiding scheduler);
+# harmless on a single device
+GPU_XLA_FLAGS = (
+    "--xla_gpu_triton_gemm_any=True "
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true "
+)
+
+
+def set_platform(platform: str | None) -> None:
+    """Pin jax to ``'cpu'`` / ``'gpu'`` / ``'tpu'`` (None = jax's default
+    auto-detection). GPU additionally appends the :data:`GPU_XLA_FLAGS`
+    preset to ``XLA_FLAGS``. Call before any computation runs."""
+    if platform is None:
+        return
+    if platform not in ("cpu", "gpu", "tpu"):
+        raise ValueError(f"platform {platform!r} not in (cpu, gpu, tpu)")
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                                   + GPU_XLA_FLAGS).strip()
+
+
+def set_host_device_count(n: int) -> None:
+    """Expose ``n`` fake CPU devices (``--xla_force_host_platform_device_
+    count``) so mesh-sharded fleets can be exercised on one host. Must run
+    before jax's backend initialises."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    prefix = "--xla_force_host_platform_device_count"
+    flags = " ".join(f for f in flags.split() if not f.startswith(prefix))
+    os.environ["XLA_FLAGS"] = (flags + f" {prefix}={n}").strip()
+
+
+def jax_enable_x64(use_x64: bool = True) -> None:
+    """Flip jax's default float width to 64-bit (the simulator itself is
+    f32-native; this exists for debugging accumulation-drift hypotheses)."""
+    jax.config.update("jax_enable_x64", bool(use_x64))
+
+
+def set_debug_nans(debug: bool = True) -> None:
+    """Make jax error out on NaN production (slow — debugging only)."""
+    jax.config.update("jax_debug_nans", bool(debug))
+
+
+def backend() -> str:
+    """The active jax backend name ('cpu' / 'gpu' / 'tpu') — the key the
+    BENCH_* writers record next to their numbers."""
+    return jax.default_backend()

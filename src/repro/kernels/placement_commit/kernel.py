@@ -44,6 +44,15 @@ from jax.experimental import pallas as pl
 
 NEG_INF = float("-inf")
 
+# Proposal family codes for the fused scheduler pass (``_sched_kernel`` /
+# ``_sched_kernel_tiled``): how a lane's preference row is derived *inside*
+# the kernel, so the (B, P, N) pref tensor never round-trips through HBM.
+# Defined here (not in repro.sched) so the kernel package stays importable
+# without the scheduler registry.
+FAM_EXTERNAL = 0    # pref comes in via the ``ext`` operand (opaque proposal)
+FAM_SCORES = 1      # pref IS the base-pass score matrix (greedy best-fit)
+FAM_NODE_ORDER = 2  # pref = -((col - start) % N) — first-fit / round-robin
+
 
 def _kernel(pref_ref, req_ref, ok_ref, valid_ref, total_ref, denom_ref,
             res0_ref, dyn_ref, node_ref, res_ref, *, mode: str,
@@ -156,4 +165,342 @@ def placement_commit_pallas(pref, req, ok, valid, total, denom, reserved0,
         ),
         interpret=interpret,
     )(pref, req, ok, valid, total, denom, reserved0, dyn)
+    return node_of, reserved
+
+
+# ---------------------------------------------------------------------------
+# Fused scheduler pass: proposal derivation + commit in one kernel
+# ---------------------------------------------------------------------------
+
+def _lane_mask(fam, target):
+    """(B,) bool lane mask for ``fam[i] == target``, built from iota
+    compares against Python int literals — Pallas kernels may not capture
+    array constants, so the static tuple is lowered comparison by
+    comparison (B is the lane count, single digits in practice)."""
+    lanes = jax.lax.iota(jnp.int32, len(fam))
+    m = jnp.zeros((len(fam),), jnp.bool_)
+    for i, f in enumerate(fam):
+        if f == target:
+            m = m | (lanes == i)
+    return m
+
+
+def _family_pref(scores_j, no_j, ext_j, fam, ext_row):
+    """Derive this task row's preference block per lane from its proposal
+    family (static ``fam`` tuple): scores pass through, node-order prefs are
+    ``no_j`` (computed from the runtime start operand), external lanes gather
+    their pre-evaluated row from ``ext_j`` via the static ``ext_row`` map.
+    Single-family calls collapse to the bare operand (no select), so the
+    all-greedy / all-first-fit fleets pay nothing for the generality."""
+    pref = scores_j
+    if any(f == FAM_NODE_ORDER for f in fam):
+        if all(f == FAM_NODE_ORDER for f in fam):
+            pref = no_j
+        else:
+            pref = jnp.where(_lane_mask(fam, FAM_NODE_ORDER)[:, None],
+                             no_j, pref)
+    if any(f == FAM_EXTERNAL for f in fam):
+        lanes = jax.lax.iota(jnp.int32, len(fam))
+        idx = jnp.zeros((len(fam),), jnp.int32)
+        for i, r in enumerate(ext_row):
+            if r:
+                idx = jnp.where(lanes == i, r, idx)
+        sel = jnp.take(ext_j, idx, axis=0)
+        if all(f == FAM_EXTERNAL for f in fam):
+            pref = sel
+        else:
+            pref = jnp.where(_lane_mask(fam, FAM_EXTERNAL)[:, None],
+                             sel, pref)
+    return pref
+
+
+def _sched_kernel(scores_ref, req_ref, ok_ref, valid_ref, total_ref,
+                  denom_ref, res0_ref, dyn_ref, start_ref, *rest,
+                  mode: str, n_lanes: int, fam, ext_row, n_real: int):
+    """Fused proposal+commit, whole node dim resident (tile_n off): the
+    commit scan of ``_kernel`` with the preference row derived in-body from
+    ``scores`` + per-lane family params instead of a materialised pref."""
+    has_ext = any(f == FAM_EXTERNAL for f in fam)
+    if has_ext:
+        ext_ref, node_ref, res_ref = rest
+    else:
+        node_ref, res_ref = rest
+        ext_ref = None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        res_ref[...] = jnp.broadcast_to(res0_ref[...], res_ref.shape)
+
+    scores = scores_ref[...]                   # (B|1, TP, Np) f32
+    req = req_ref[...]                         # (B|1, TP, R) f32
+    ok = ok_ref[...]                           # (B|1, TP, Np) bool
+    valid = valid_ref[...]                     # (B|1, TP)    bool
+    total = total_ref[...]                     # (B|1, Np, R) f32, dead = -1
+    denom = denom_ref[...]                     # (B|1, Np, R) f32
+    dyn = dyn_ref[...][:, 0] != 0              # (B|1,) lane flags ('both')
+    start = start_ref[...][:, 0]               # (B|1,) node-order rotations
+    ext = ext_ref[...] if has_ext else None    # (BE, TP, Np) f32
+
+    B = n_lanes
+    _, TP, Np = scores.shape
+    R = req.shape[2]
+    lanes = jax.lax.iota(jnp.int32, B)
+
+    need_no = any(f == FAM_NODE_ORDER for f in fam)
+    no = None
+    if need_no and mode != "dynamic":
+        # node-order preference, shared by every task row of the window:
+        # -((col - start) % N) — first-fit at start=0, round-robin at the
+        # window-rotated start. Padded columns (col >= n_real) produce
+        # garbage that the fit mask (total = -1 there) always rejects.
+        col = jax.lax.iota(jnp.int32, Np)[None, :]
+        no = -(((col - start[:, None]) % n_real).astype(jnp.float32))
+
+    def body(j, carry):
+        reserved, node_of = carry
+        req_j = jax.lax.dynamic_slice_in_dim(req, j, 1, 1)    # (B, 1, R)
+        free = total - reserved                               # (B, Np, R)
+        fit = (req_j <= free + 1e-9).all(-1) \
+            & jax.lax.dynamic_slice_in_dim(ok, j, 1, 1)[:, 0]   # (B, Np)
+        if mode != "static":
+            sc_dyn = -((free - req_j) / denom).sum(-1)        # (B, Np)
+        if mode != "dynamic":
+            scores_j = jax.lax.dynamic_slice_in_dim(scores, j, 1, 1)[:, 0]
+            ext_j = (jax.lax.dynamic_slice_in_dim(ext, j, 1, 1)[:, 0]
+                     if has_ext else None)
+            pref_j = _family_pref(scores_j, no, ext_j, fam, ext_row)
+        if mode == "both":
+            sc = jnp.where(dyn[:, None], sc_dyn, pref_j)
+            sc = jnp.where(fit, sc, NEG_INF)
+        elif mode == "dynamic":
+            sc = jnp.where(fit, sc_dyn, NEG_INF)
+        else:
+            sc = jnp.where(fit, pref_j, NEG_INF)
+        n = jnp.argmax(sc, axis=-1).astype(jnp.int32)         # (B,)
+        flat = lanes * Np + n
+        fit_n = fit.reshape(B * Np)[flat]
+        can = fit_n & jax.lax.dynamic_slice_in_dim(valid, j, 1, 1)[:, 0]
+        add = jnp.where(can[:, None], req_j[:, 0, :], 0.0)    # (B, R)
+        reserved = reserved.reshape(B * Np, R).at[flat].add(add) \
+                           .reshape(B, Np, R)
+        node_of = jax.lax.dynamic_update_slice_in_dim(
+            node_of, jnp.where(can, n, -1)[:, None], j, 1)
+        return reserved, node_of
+
+    node_of0 = jnp.full((B, TP), -1, jnp.int32)
+    reserved, node_of = jax.lax.fori_loop(0, TP, body,
+                                          (res_ref[...], node_of0))
+    res_ref[...] = reserved
+    node_ref[...] = node_of
+
+
+def _sched_kernel_tiled(scores_ref, req_ref, ok_ref, valid_ref, total_ref,
+                        denom_ref, res0_ref, dyn_ref, start_ref, *rest,
+                        mode: str, n_lanes: int, fam, ext_row, n_real: int,
+                        tile_n: int):
+    """Node-streaming fused pass: grid (P, N/tile_n), one task row per outer
+    step, score/pref blocks streamed tile-by-tile over the node dim with a
+    cross-tile running argmax carried in revisited output blocks — the full
+    (B, P, N) pref never exists and per-step working blocks are (B, tile_n),
+    which is what holds the pass at the 12.5K-node full cell.
+
+    Carry contract (csc = best score, cni = [best node, best fit]): tile 0
+    is adopted unconditionally, later tiles only on a STRICT improvement —
+    preserving the reference's global first-index argmax tie-break, including
+    the all--inf edge where the ref places at node 0 iff fit[0] held (hence
+    fit is carried alongside the score, not re-derived from it). NaN prefs
+    would diverge (NaN never wins a strict compare) — the proposal contract
+    (finite or -inf) already excludes them."""
+    has_ext = any(f == FAM_EXTERNAL for f in fam)
+    if has_ext:
+        ext_ref, node_ref, res_ref, csc_ref, cni_ref = rest
+    else:
+        node_ref, res_ref, csc_ref, cni_ref = rest
+        ext_ref = None
+    j, k = pl.program_id(0), pl.program_id(1)
+    K = pl.num_programs(1)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        res_ref[...] = jnp.broadcast_to(res0_ref[...], res_ref.shape)
+
+    B = n_lanes
+    reserved = res_ref[...]                    # (B, Np, R) running tally
+    Np, R = reserved.shape[1], reserved.shape[2]
+    TN = tile_n
+    off = k * TN
+    lanes = jax.lax.iota(jnp.int32, B)
+
+    res_t = jax.lax.dynamic_slice_in_dim(reserved, off, TN, 1)
+    tot_t = jax.lax.dynamic_slice_in_dim(total_ref[...], off, TN, 1)
+    free = tot_t - res_t                       # (B, TN, R)
+    req_j = req_ref[...][:, 0, :]              # (B|1, R)
+    ok_j = ok_ref[...][:, 0, :]                # (B|1, TN)
+    fit = (req_j[:, None, :] <= free + 1e-9).all(-1) & ok_j   # (B, TN)
+    dyn = dyn_ref[...][:, 0] != 0
+    start = start_ref[...][:, 0]
+    if mode != "static":
+        den_t = jax.lax.dynamic_slice_in_dim(denom_ref[...], off, TN, 1)
+        sc_dyn = -((free - req_j[:, None, :]) / den_t).sum(-1)
+    if mode != "dynamic":
+        scores_j = scores_ref[...][:, 0, :]    # (B|1, TN)
+        no = None
+        if any(f == FAM_NODE_ORDER for f in fam):
+            col = (off + jax.lax.iota(jnp.int32, TN))[None, :]
+            no = -(((col - start[:, None]) % n_real).astype(jnp.float32))
+        ext_j = ext_ref[...][:, 0, :] if has_ext else None
+        pref_j = _family_pref(scores_j, no, ext_j, fam, ext_row)
+    if mode == "both":
+        sc = jnp.where(dyn[:, None], sc_dyn, pref_j)
+        sc = jnp.where(fit, sc, NEG_INF)
+    elif mode == "dynamic":
+        sc = jnp.where(fit, sc_dyn, NEG_INF)
+    else:
+        sc = jnp.where(fit, pref_j, NEG_INF)
+    sc = jnp.broadcast_to(sc, (B, TN))
+
+    loc = jnp.argmax(sc, axis=-1).astype(jnp.int32)           # (B,)
+    tile_best = jnp.max(sc, axis=-1)                          # (B,)
+    fit_at = jnp.broadcast_to(fit, (B, TN)).reshape(B * TN)[lanes * TN + loc]
+    glob_n = off + loc
+
+    prev = cni_ref[...]
+    adopt = (k == 0) | (tile_best > csc_ref[...][:, 0])
+    best_sc = jnp.where(adopt, tile_best, csc_ref[...][:, 0])
+    best_n = jnp.where(adopt, glob_n, prev[:, 0])
+    best_fit = jnp.where(adopt, fit_at, prev[:, 1] != 0)
+    csc_ref[...] = best_sc[:, None]
+    cni_ref[...] = jnp.stack([best_n, best_fit.astype(jnp.int32)], axis=1)
+
+    can = best_fit & jnp.broadcast_to(valid_ref[...][:, 0], (B,))
+    node_ref[...] = jnp.where(can, best_n, -1)[:, None]
+
+    @pl.when(k == K - 1)
+    def _commit():
+        add = jnp.where(can[:, None],
+                        jnp.broadcast_to(req_j, (B, R)), 0.0)
+        flat = lanes * Np + best_n
+        res_ref[...] = reserved.reshape(B * Np, R).at[flat].add(add) \
+                               .reshape(B, Np, R)
+
+
+def _sched_specs(req, valid, total, denom, reserved0, dyn, start,
+                 col_blocked, tile_p, tile_n, col_grid):
+    """Shared in_specs builder for the two fused callers. ``col_blocked``
+    lists the (B|1, P, Np) operands (scores, ok, ext when present) that take
+    a node-column block; ``col_grid`` adds the node-tile grid axis (tiled
+    kernel) to them."""
+    if col_grid:
+        def task_cols(x):
+            return pl.BlockSpec((x.shape[0], tile_p, tile_n),
+                                lambda j, k: (0, j, k))
+
+        def task_spec(x, last):
+            return pl.BlockSpec((x.shape[0], tile_p) + last,
+                                lambda j, k: (0, j) + (0,) * len(last))
+
+        def node_spec(x):
+            return pl.BlockSpec(x.shape, lambda j, k: (0,) * x.ndim)
+    else:
+        def task_cols(x):
+            return pl.BlockSpec((x.shape[0], tile_p, tile_n),
+                                lambda i: (0, i, 0))
+
+        def task_spec(x, last):
+            return pl.BlockSpec((x.shape[0], tile_p) + last,
+                                lambda i: (0, i) + (0,) * len(last))
+
+        def node_spec(x):
+            return pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim)
+
+    scores, ok = col_blocked[0], col_blocked[1]
+    specs = [
+        task_cols(scores),
+        task_spec(req, (req.shape[2],)),
+        task_cols(ok),
+        task_spec(valid, ()),
+        node_spec(total),
+        node_spec(denom),
+        node_spec(reserved0),
+        node_spec(dyn),
+        node_spec(start),
+    ]
+    for extra in col_blocked[2:]:
+        specs.append(task_cols(extra))
+    return specs
+
+
+def sched_commit_pallas(scores, req, ok, valid, total, denom, reserved0,
+                        dyn, start, ext, *, n_lanes: int, fam, ext_row,
+                        n_real: int, mode: str = "both", tile_p: int = 128,
+                        tile_n=None, interpret: bool = True):
+    """Batched fused proposal+commit over ``n_lanes`` lanes.
+
+    scores (B|1, P, Np) base-pass scores; ext (BE, P, Np) pre-evaluated
+    external prefs (None when no lane is FAM_EXTERNAL); start (B|1, 1) i32
+    node-order rotations; fam / ext_row static per-lane tuples (length B, or
+    1 when every lane shares one family); n_real the unpadded node count the
+    node-order modulus uses. ``tile_n=None`` keeps the node dim whole per
+    step (the CPU-interpret default); an int streams (B, tile_n) blocks over
+    a (P, Np/tile_n) grid with a cross-tile argmax carry. Returns
+    (node_of (B, P) i32, reserved (B, Np, R) f32) like
+    ``placement_commit_pallas`` — bitwise-identical to composing the
+    family's proposal with ``placement_commit_ref``."""
+    P, Np = scores.shape[1], scores.shape[2]
+    R = req.shape[2]
+    assert mode in ("static", "dynamic", "both"), mode
+    assert len(fam) in (1, n_lanes), (len(fam), n_lanes)
+
+    operands = [scores, req, ok, valid, total, denom, reserved0, dyn, start]
+    if ext is not None:
+        operands.append(ext)
+
+    col_blocked = [scores, ok] + ([ext] if ext is not None else [])
+
+    if tile_n is None or tile_n >= Np:
+        assert P % tile_p == 0, (P, tile_p)
+        kernel = functools.partial(_sched_kernel, mode=mode, n_lanes=n_lanes,
+                                   fam=fam, ext_row=ext_row, n_real=n_real)
+        node_of, reserved = pl.pallas_call(
+            kernel,
+            grid=(P // tile_p,),
+            in_specs=_sched_specs(req, valid, total, denom, reserved0, dyn,
+                                  start, col_blocked, tile_p, Np,
+                                  col_grid=False),
+            out_specs=(
+                pl.BlockSpec((n_lanes, tile_p), lambda i: (0, i)),
+                pl.BlockSpec((n_lanes, Np, R), lambda i: (0, 0, 0)),
+            ),
+            out_shape=(
+                jax.ShapeDtypeStruct((n_lanes, P), jnp.int32),
+                jax.ShapeDtypeStruct((n_lanes, Np, R), jnp.float32),
+            ),
+            interpret=interpret,
+        )(*operands)
+        return node_of, reserved
+
+    assert Np % tile_n == 0, (Np, tile_n)
+    kernel = functools.partial(_sched_kernel_tiled, mode=mode,
+                               n_lanes=n_lanes, fam=fam, ext_row=ext_row,
+                               n_real=n_real, tile_n=tile_n)
+    node_of, reserved, _csc, _cni = pl.pallas_call(
+        kernel,
+        grid=(P, Np // tile_n),
+        in_specs=_sched_specs(req, valid, total, denom, reserved0, dyn,
+                              start, col_blocked, 1, tile_n, col_grid=True),
+        out_specs=(
+            pl.BlockSpec((n_lanes, 1), lambda j, k: (0, j)),
+            pl.BlockSpec((n_lanes, Np, R), lambda j, k: (0, 0, 0)),
+            pl.BlockSpec((n_lanes, 1), lambda j, k: (0, 0)),
+            pl.BlockSpec((n_lanes, 2), lambda j, k: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_lanes, P), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, Np, R), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes, 2), jnp.int32),
+        ),
+        interpret=interpret,
+    )(*operands)
     return node_of, reserved

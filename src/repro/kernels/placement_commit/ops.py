@@ -11,8 +11,13 @@ import jax
 import jax.numpy as jnp
 from jax.custom_batching import custom_vmap
 
-from repro.kernels.placement_commit.kernel import placement_commit_pallas
-from repro.kernels.placement_commit.ref import placement_commit_ref
+from repro.kernels.placement_commit.kernel import (FAM_EXTERNAL,
+                                                   FAM_NODE_ORDER,
+                                                   FAM_SCORES,
+                                                   placement_commit_pallas,
+                                                   sched_commit_pallas)
+from repro.kernels.placement_commit.ref import (placement_commit_ref,
+                                                sched_pref_ref)
 
 
 def _pad_to(x: jax.Array, n: int, axis: int, fill=0):
@@ -68,10 +73,144 @@ def _make_commit(mode: str, tile_p: Optional[int], tile_n: int,
     return commit
 
 
+def _sched_call_batched(n_lanes, scores, req, ok, valid, total, denom, res0,
+                        dyn, start, ext, *, fam, ext_row, mode, tile_p,
+                        tile_n, interpret):
+    """Pad + call the fused scheduler kernel; slices padding back off.
+
+    ``tile_n`` < N selects the node-streaming tiled kernel (one task row per
+    grid step, cross-tile argmax carry); otherwise the node dim stays whole
+    per step and ``tile_n`` only sets the TPU lane-alignment padding.
+    ``n_real`` = the unpadded node count keeps the node-order modulus
+    honest in the padded geometry."""
+    P, N = scores.shape[1], scores.shape[2]
+    stream = tile_n is not None and tile_n < N
+    if stream:
+        tp, tn, Pp = 1, tile_n, P
+    else:
+        tp = min(tile_p or (P if interpret else 128), P)
+        Pp = ((P + tp - 1) // tp) * tp
+        tn = min(tile_n or 128, N)
+    Np = ((N + tn - 1) // tn) * tn
+    node_of, reserved = sched_commit_pallas(
+        _pad_to(_pad_to(scores, Pp, 1), Np, 2),
+        _pad_to(req, Pp, 1),
+        _pad_to(_pad_to(ok, Pp, 1), Np, 2),
+        _pad_to(valid, Pp, 1),
+        _pad_to(total, Np, 1, fill=-1.0),  # padded nodes can never fit
+        _pad_to(denom, Np, 1, fill=1.0),   # keep the re-score finite
+        _pad_to(res0, Np, 1),
+        dyn, start,
+        None if ext is None else _pad_to(_pad_to(ext, Pp, 1), Np, 2),
+        n_lanes=n_lanes, fam=fam, ext_row=ext_row, n_real=N, mode=mode,
+        tile_p=tp, tile_n=(tn if stream else None), interpret=interpret)
+    return node_of[:, :P], reserved[:, :N]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_sched(family: int, mode: str, tile_p: Optional[int],
+                tile_n: Optional[int], interpret: bool):
+    """Cached ``custom_vmap`` entry for the single-family fused pass (the
+    mixed-family fleet goes through :func:`sched_commit_fleet`, which is
+    natively batched and needs no vmap rule)."""
+    fam, ext_row = (family,), (0,)
+
+    def call_batched(n_lanes, scores, req, ok, valid, total, denom, res0,
+                     dyn, start):
+        return _sched_call_batched(
+            n_lanes, scores, req, ok, valid, total, denom, res0, dyn, start,
+            None, fam=fam, ext_row=ext_row, mode=mode, tile_p=tile_p,
+            tile_n=tile_n, interpret=interpret)
+
+    @custom_vmap
+    def sched(scores, req, ok, valid, total, denom, res0, dyn, start):
+        args = (scores, req, ok, valid, total, denom, res0, dyn, start)
+        node_of, reserved = call_batched(1, *(x[None] for x in args))
+        return node_of[0], reserved[0]
+
+    @sched.def_vmap
+    def _batched_rule(axis_size, in_batched, *args):
+        lanes = [x if b else x[None] for x, b in zip(args, in_batched)]
+        return call_batched(axis_size, *lanes), (True, True)
+
+    return sched
+
+
+def sched_pass(scores, req, base_ok, valid, total, denom, reserved0,
+               dynamic_bestfit=False, *, family: int = FAM_SCORES,
+               start=0, ext=None, use_kernel: bool = False,
+               interpret: bool = True, tile_p: Optional[int] = None,
+               tile_n: Optional[int] = None, return_tally: bool = False):
+    """Fused proposal+commit for ONE proposal family: derive the preference
+    matrix from the base-pass ``scores`` + family params (``kernel.FAM_*``)
+    and run the capacity-checked commit without materialising pref in HBM.
+
+    Same operand/return contract as :func:`placement_commit` with ``pref``
+    replaced by (scores, family, start): FAM_SCORES uses scores directly
+    (greedy), FAM_NODE_ORDER ranks by ``-((col - start) % N)`` (first-fit /
+    round-robin; ``start`` may be a traced scalar — the window rotation),
+    FAM_EXTERNAL takes the pre-evaluated ``ext`` (opaque proposal — the
+    commit still kernelises, the derivation cannot). ``tile_n`` streams
+    node-dim tiles through the commit (see ``placement_commit``'s
+    ``stream_n``). Kernel and ref are bitwise-identical; the kernel path
+    vmaps through a ``custom_vmap`` rule like the plain commit."""
+    if not use_kernel or family == FAM_EXTERNAL:
+        pref = sched_pref_ref(scores, start, family, ext)
+        return placement_commit(pref, req, base_ok, valid, total, denom,
+                                reserved0, dynamic_bestfit,
+                                use_kernel=use_kernel, interpret=interpret,
+                                tile_p=tile_p, stream_n=tile_n,
+                                return_tally=return_tally)
+    if isinstance(dynamic_bestfit, jax.Array):
+        mode = "both"
+        dyn = dynamic_bestfit.astype(jnp.int32).reshape(1)
+    else:
+        mode = "dynamic" if dynamic_bestfit else "static"
+        dyn = jnp.full((1,), int(bool(dynamic_bestfit)), jnp.int32)
+    start_arr = jnp.asarray(start, jnp.int32).reshape(1)
+    sched = _make_sched(family, mode, tile_p, tile_n, interpret)
+    out = sched(scores, req, base_ok, valid, total, denom, reserved0, dyn,
+                start_arr)
+    return out if return_tally else out[0]
+
+
+def sched_commit_fleet(scores, ok, req, valid, total, denom, reserved0,
+                       start, *, fam, dynamic, ext=None, ext_row=None,
+                       interpret: bool = True, tile_p: Optional[int] = None,
+                       tile_n: Optional[int] = None):
+    """Mixed-family fused pass for the switchless scenario fleet — natively
+    batched (every operand already carries the lane axis B).
+
+    scores/ok (B, P, N), req (B, P, R), valid (B, P), total/denom/reserved0
+    (B, N, R), start (B,) i32 per-lane node-order rotations; ``fam`` /
+    ``dynamic`` / ``ext_row`` static per-lane tuples from the dispatch
+    table; ``ext`` (BE, P, N) stacks the evaluated prefs of the external
+    (non-fusable) lanes, indexed per-lane by ``ext_row``. Returns
+    (node_of (B, P) i32, tally (B, N, R) f32) — bitwise-identical,
+    lane-for-lane, to the ``lax.switch`` path's propose -> finalize."""
+    B = scores.shape[0]
+    dynamic = tuple(bool(d) for d in dynamic)
+    if all(dynamic):
+        mode = "dynamic"
+    elif not any(dynamic):
+        mode = "static"
+    else:
+        mode = "both"
+    dyn = jnp.asarray([int(d) for d in dynamic], jnp.int32)[:, None]
+    if ext_row is None:
+        ext_row = (0,) * len(fam)
+    return _sched_call_batched(
+        B, scores, req, ok, valid, total, denom, reserved0, dyn,
+        start.astype(jnp.int32)[:, None], ext, fam=tuple(fam),
+        ext_row=tuple(ext_row), mode=mode, tile_p=tile_p, tile_n=tile_n,
+        interpret=interpret)
+
+
 def placement_commit(pref, req, base_ok, valid, total, denom, reserved0,
                      dynamic_bestfit=False, *, use_kernel: bool = False,
                      interpret: bool = True, tile_p: Optional[int] = None,
-                     tile_n: int = 128, return_tally: bool = False):
+                     tile_n: int = 128, stream_n: Optional[int] = None,
+                     return_tally: bool = False):
     """Sequential capacity-checked assignment in priority (row) order.
 
     pref (P,N) f32 preference scores, req (P,R) f32 requests, base_ok (P,N)
@@ -112,6 +251,16 @@ def placement_commit(pref, req, base_ok, valid, total, denom, reserved0,
         else:
             mode = "dynamic" if dynamic_bestfit else "static"
             dyn = jnp.full((1,), int(bool(dynamic_bestfit)), jnp.int32)
-        commit = _make_commit(mode, tile_p, tile_n, interpret)
-        out = commit(pref, req, base_ok, valid, total, denom, reserved0, dyn)
+        if stream_n is not None and stream_n < pref.shape[-1]:
+            # node-streaming commit: FAM_SCORES with pref as the score
+            # matrix IS the plain commit, tiled over node blocks with a
+            # cross-tile argmax carry (the full-cell N=12,500 path)
+            sched = _make_sched(FAM_SCORES, mode, tile_p, stream_n,
+                                interpret)
+            out = sched(pref, req, base_ok, valid, total, denom, reserved0,
+                        dyn, jnp.zeros((1,), jnp.int32))
+        else:
+            commit = _make_commit(mode, tile_p, tile_n, interpret)
+            out = commit(pref, req, base_ok, valid, total, denom, reserved0,
+                         dyn)
     return out if return_tally else out[0]

@@ -57,3 +57,27 @@ def placement_commit_ref(pref: jax.Array, req: jax.Array, base_ok: jax.Array,
     node_of0 = jnp.full((P,), -1, jnp.int32)
     reserved, node_of = jax.lax.fori_loop(0, P, body, (reserved0, node_of0))
     return node_of, reserved
+
+
+def sched_pref_ref(scores: jax.Array, start, family: int, ext=None):
+    """Reference proposal-family expansion for the fused scheduler pass:
+    derive the (P, N) preference matrix the family implies, so the fused
+    kernel can be validated against ``pref -> placement_commit_ref``.
+
+    family is a ``kernel.FAM_*`` code: SCORES passes the base-pass score
+    matrix through (greedy), NODE_ORDER ranks nodes by ``-((col - start) %
+    N)`` (first-fit at start=0, round-robin at a rotating start), EXTERNAL
+    returns the pre-evaluated ``ext`` (opaque proposal — nothing to fuse).
+    """
+    from repro.kernels.placement_commit.kernel import (FAM_NODE_ORDER,
+                                                       FAM_SCORES)
+    if family == FAM_SCORES:
+        return scores
+    if family == FAM_NODE_ORDER:
+        N = scores.shape[-1]
+        order = (jnp.arange(N, dtype=jnp.int32) - start) % N
+        return jnp.broadcast_to(-order.astype(jnp.float32)[None, :],
+                                scores.shape)
+    if ext is None:
+        raise ValueError("FAM_EXTERNAL needs the evaluated ext preference")
+    return ext

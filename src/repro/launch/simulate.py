@@ -86,7 +86,14 @@ def main(argv=None):
                     help="write a pausable snapshot here at the end")
     ap.add_argument("--batch-windows", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the jax backend (default: auto-detect); gpu "
+                         "adds the XLA perf-flag preset (repro.env)")
     args = ap.parse_args(argv)
+
+    from repro import env
+    env.set_platform(args.platform)
 
     if args.list_schedulers:
         from repro.sched import describe_schedulers

@@ -64,6 +64,8 @@ def build_cfg(args) -> SimConfig:
         over["use_kernels"] = True
     if args.stats_stride != 1:      # 0/negative hit SimConfig's validator
         over["stats_stride"] = args.stats_stride
+    if args.dispatch:
+        over["sched_dispatch"] = args.dispatch
     if not args.cell_a:
         over.setdefault("max_events_per_window", 4096)
         over.setdefault("sched_batch", 256)
@@ -163,7 +165,21 @@ def main(argv=None):
     ap.add_argument("--json", default=None, help="write full report here")
     ap.add_argument("--snapshot", default=None,
                     help="write a batched fleet snapshot here at the end")
+    ap.add_argument("--platform", default=None,
+                    choices=("cpu", "gpu", "tpu"),
+                    help="pin the jax backend (default: auto-detect); gpu "
+                         "adds the XLA perf-flag preset (repro.env)")
+    ap.add_argument("--dispatch", default=None,
+                    choices=("auto", "switch", "table"),
+                    help="scheduler dispatch strategy (cfg.sched_dispatch): "
+                         "auto picks switchless when every lane's scheduler "
+                         "publishes a table form, switch forces the vmapped "
+                         "lax.switch fallback, table demands switchless and "
+                         "errors if any scheduler is opaque")
     args = ap.parse_args(argv)
+
+    from repro import env
+    env.set_platform(args.platform)
 
     if args.list_schedulers:
         from repro.sched import describe_schedulers

@@ -39,8 +39,8 @@ from repro.distributed.sharding import import_shard_map
 from repro.core import engine as eng
 from repro.core import stats as stats_mod
 from repro.core.events import EventWindow
-from repro.sched import (DYNAMIC_BESTFIT, PROPOSERS, base_pass, finalize,
-                         get_scheduler)
+from repro.sched import (DispatchTable, base_pass, finalize,
+                         make_switchless_dispatch, snapshot_dispatch)
 from repro.core.state import SimState, init_state
 from repro.scenarios import perturb
 from repro.scenarios.spec import ScenarioKnobs
@@ -87,45 +87,14 @@ def init_batched_state(cfg: SimConfig, n_scenarios: int,
     return shard_over_fleet(batched, mesh)
 
 
-def make_scenario_advance(cfg: SimConfig, scheduler_names: Tuple[str, ...],
-                          has_storm: bool = True):
-    """Single-scenario (unbatched) stats-free transition; vmap adds the
-    scenario axis.  Returns ``(state, injected)`` — the per-window injected
-    SUBMIT count rides the carry so strided stats rows
-    (``cfg.stats_stride > 1``) can accumulate it across skipped windows.
+def make_scenario_prelude(cfg: SimConfig, has_storm: bool = True):
+    """Single-scenario (unbatched) pre-dispatch transition: window
+    perturbation, event application, eviction, storm, injection expiry —
+    everything :func:`make_scenario_advance` runs before the scheduler.
+    Returns ``(state, injected)``; split out so the switchless fleet path
+    can vmap it and then dispatch all lanes in ONE batched pass."""
 
-    Scheduler dispatch exploits the shared structure of repro.sched:
-    every scheduler is `base_pass` (constraint matching + pending top-k) ->
-    per-scheduler *proposal* -> `finalize` (capacity-checked assignment).
-    Only the cheap proposal goes through ``lax.switch`` — the expensive
-    shared passes run once per lane regardless of how many schedulers the
-    fleet mixes (a vmapped switch executes every branch, so keeping the
-    branches thin matters). The proposal table comes from the scheduler
-    registry, so lanes may name plugins registered via
-    ``repro.sched.register_scheduler``.
-
-    ``has_storm=False`` (a *static* promise from the runner that no lane
-    sets ``evict_storm_frac > 0``) drops the storm pass from the compiled
-    program entirely — at storm_frac == 0 it is a bitwise identity, but it
-    still costs an O(max_tasks) hash sweep per lane per window (plus, under
-    incremental accounting, two masked segment-sum debit passes).
-    """
-    proposers = tuple(PROPOSERS[n] for n in scheduler_names)
-    dyn_table = jnp.asarray([DYNAMIC_BESTFIT[n] for n in scheduler_names])
-
-    def dispatch(state: SimState, rng: jax.Array, idx: jax.Array) -> SimState:
-        if len(proposers) == 1:     # no switch needed — keeps lane 0 trivial
-            return get_scheduler(scheduler_names[0])(state, cfg, rng)
-        pend_idx, valid, base_ok, scores = base_pass(state, cfg)
-        pref = jax.lax.switch(
-            idx,
-            [lambda s, r, pi, v, bo, sc, fn=fn: fn(s, cfg, r, pi, v, bo, sc)
-             for fn in proposers],
-            state, rng, pend_idx, valid, base_ok, scores)
-        return finalize(state, cfg, pend_idx, valid, base_ok, pref,
-                        dynamic_bestfit=dyn_table[idx])
-
-    def advance(state: SimState, w: EventWindow, rng: jax.Array,
+    def prelude(state: SimState, w: EventWindow,
                 knobs: ScenarioKnobs) -> Tuple[SimState, jax.Array]:
         w = perturb.perturb_window(w, knobs, cfg, window=state.window)
         if cfg.inject_slots:
@@ -145,6 +114,65 @@ def make_scenario_advance(cfg: SimConfig, scheduler_names: Tuple[str, ...],
             state = perturb.expire_injected(state, knobs, cfg)
         if not cfg.incremental_accounting:
             state = eng.recompute_accounting(state, cfg)
+        return state, injected
+
+    return prelude
+
+
+def make_scenario_advance(cfg: SimConfig, scheduler_names: Tuple[str, ...],
+                          has_storm: bool = True,
+                          table: Optional[DispatchTable] = None):
+    """Single-scenario (unbatched) stats-free transition; vmap adds the
+    scenario axis.  Returns ``(state, injected)`` — the per-window injected
+    SUBMIT count rides the carry so strided stats rows
+    (``cfg.stats_stride > 1``) can accumulate it across skipped windows.
+
+    Scheduler dispatch exploits the shared structure of repro.sched:
+    every scheduler is `base_pass` (constraint matching + pending top-k) ->
+    per-scheduler *proposal* -> `finalize` (capacity-checked assignment).
+    Only the cheap proposal goes through ``lax.switch`` — the expensive
+    shared passes run once per lane regardless of how many schedulers the
+    fleet mixes (a vmapped switch executes every branch, so keeping the
+    branches thin matters). This is the fleet's *fallback* dispatch: fleets
+    whose schedulers all registered table forms go through the switchless
+    grouped path instead (see :func:`run_scenarios` / ``sched.table``).
+
+    The proposal rows come from ``table`` — an immutable
+    ``snapshot_dispatch`` of the registry taken when the fleet was built
+    (or here, if the caller didn't snapshot) — NOT from the live registry
+    views, so plugins registered after fleet construction cannot reorder or
+    retarget a compiled fleet's scheduler indices.
+
+    ``has_storm=False`` (a *static* promise from the runner that no lane
+    sets ``evict_storm_frac > 0``) drops the storm pass from the compiled
+    program entirely — at storm_frac == 0 it is a bitwise identity, but it
+    still costs an O(max_tasks) hash sweep per lane per window (plus, under
+    incremental accounting, two masked segment-sum debit passes).
+    """
+    if table is None:
+        table = snapshot_dispatch(scheduler_names)
+    proposers = table.proposers
+    dyn_table = jnp.asarray(table.dynamic)
+    prelude = make_scenario_prelude(cfg, has_storm)
+
+    def dispatch(state: SimState, rng: jax.Array, idx: jax.Array) -> SimState:
+        pend_idx, valid, base_ok, scores = base_pass(state, cfg)
+        if len(proposers) == 1:     # no switch needed — keeps lane 0 trivial
+            pref = proposers[0](state, cfg, rng, pend_idx, valid, base_ok,
+                                scores)
+            return finalize(state, cfg, pend_idx, valid, base_ok, pref,
+                            dynamic_bestfit=table.dynamic[0])
+        pref = jax.lax.switch(
+            idx,
+            [lambda s, r, pi, v, bo, sc, fn=fn: fn(s, cfg, r, pi, v, bo, sc)
+             for fn in proposers],
+            state, rng, pend_idx, valid, base_ok, scores)
+        return finalize(state, cfg, pend_idx, valid, base_ok, pref,
+                        dynamic_bestfit=dyn_table[idx])
+
+    def advance(state: SimState, w: EventWindow, rng: jax.Array,
+                knobs: ScenarioKnobs) -> Tuple[SimState, jax.Array]:
+        state, injected = prelude(state, w, knobs)
         state = dispatch(state, rng, knobs.sched_idx)
         if not cfg.incremental_accounting:
             state = eng.recompute_accounting(state, cfg)
@@ -154,13 +182,14 @@ def make_scenario_advance(cfg: SimConfig, scheduler_names: Tuple[str, ...],
 
 
 def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
-                       has_storm: bool = True):
+                       has_storm: bool = True,
+                       table: Optional[DispatchTable] = None):
     """Single-scenario (unbatched) step (advance + stats row); vmap adds the
     scenario axis.  See :func:`make_scenario_advance` for the transition
     semantics — this wrapper exists for unit tests and the stride-1 mental
     model; ``run_scenarios`` composes the advance and the (vmapped) stats
     emission itself so strided runs skip the stats work entirely."""
-    advance = make_scenario_advance(cfg, scheduler_names, has_storm)
+    advance = make_scenario_advance(cfg, scheduler_names, has_storm, table)
 
     def step(state: SimState, w: EventWindow, rng: jax.Array,
              knobs: ScenarioKnobs
@@ -173,9 +202,36 @@ def make_scenario_step(cfg: SimConfig, scheduler_names: Tuple[str, ...],
     return step
 
 
+def _want_switchless(cfg: SimConfig, table: DispatchTable,
+                     lane_scheds) -> bool:
+    """Resolve ``cfg.sched_dispatch`` against what this launch can do.
+
+    Switchless needs the per-lane scheduler assignment as a STATIC tuple
+    (``lane_scheds``, from ScenarioFleet) and a table form for every
+    scheduler in the table. 'auto' falls back to switch when either is
+    missing; 'table' raises instead of silently degrading."""
+    able = lane_scheds is not None and table.switchless
+    if cfg.sched_dispatch == "switch":
+        return False
+    if cfg.sched_dispatch == "table" and not able:
+        opaque = [n for n, f in zip(table.names, table.forms) if f is None]
+        if opaque:
+            raise ValueError(
+                f"cfg.sched_dispatch='table' but schedulers {opaque} have "
+                "no table form — register_scheduler(..., table_form=...) "
+                "them or drop to 'auto'/'switch'")
+        raise ValueError(
+            "cfg.sched_dispatch='table' but no static lane assignment was "
+            "provided (sharded fleets and the serving warm path dispatch "
+            "with lax.switch) — use 'auto' or 'switch'")
+    return able
+
+
 def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
                   cfg: SimConfig, scheduler_names: Tuple[str, ...],
-                  seed: int = 0, has_storm: bool = True
+                  seed: int = 0, has_storm: bool = True,
+                  table: Optional[DispatchTable] = None,
+                  lane_scheds: Optional[Tuple[int, ...]] = None
                   ) -> Tuple[SimState, Dict[str, jax.Array]]:
     """Scan the vmapped step over stacked windows.
 
@@ -187,13 +243,41 @@ def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
     paired what-if comparisons). ``has_storm=False`` statically drops the
     eviction-storm pass (only valid when every lane's storm_frac is 0).
 
+    Scheduler dispatch: with ``lane_scheds`` (the fleet's static per-lane
+    scheduler indices into ``scheduler_names``) and a fully table-formed
+    registry snapshot, the per-window advance is *switchless* — the lanes
+    run a vmapped prelude, then ONE grouped scheduling pass that evaluates
+    each distinct proposal family only over the lanes that use it (under
+    ``cfg.use_kernels``, fused into the placement-commit kernel). Otherwise
+    (opaque plugin in the mix, no static lane map, or
+    ``cfg.sched_dispatch='switch'``) every lane dispatches through the
+    classic vmapped ``lax.switch``. Both paths produce bitwise-identical
+    lane trajectories; ``lane_scheds`` MUST agree with ``knobs.sched_idx``
+    (ScenarioFleet builds both from the same spec list).
+
     With ``cfg.stats_stride == k > 1`` the scan emits one (B, ...) stats
     row per k windows — same cadence and tail semantics as
     ``engine.run_windows``, with the per-window ``injected_arrivals`` count
     accumulated across each chunk so amplification lanes lose no events.
     """
-    advance = make_scenario_advance(cfg, scheduler_names, has_storm)
-    vadv = jax.vmap(advance, in_axes=(0, None, None, 0))
+    if table is None:
+        table = snapshot_dispatch(scheduler_names)
+    if _want_switchless(cfg, table, lane_scheds):
+        prelude = make_scenario_prelude(cfg, has_storm)
+        vpre = jax.vmap(prelude, in_axes=(0, None, 0))
+        sched_B = make_switchless_dispatch(cfg, table, lane_scheds)
+        vrec = jax.vmap(lambda s: eng.recompute_accounting(s, cfg))
+
+        def vadv(state_B, w, key, kn):
+            state_B, injected = vpre(state_B, w, kn)
+            state_B = sched_B(state_B, key)
+            if not cfg.incremental_accounting:
+                state_B = vrec(state_B)
+            return state_B._replace(window=state_B.window + 1), injected
+    else:
+        advance = make_scenario_advance(cfg, scheduler_names, has_storm,
+                                        table)
+        vadv = jax.vmap(advance, in_axes=(0, None, None, 0))
     vstats = jax.vmap(lambda s: stats_mod.window_stats(s, cfg))
 
     def rows_for(s, injected):
@@ -230,17 +314,20 @@ def run_scenarios(state: SimState, windows: EventWindow, knobs: ScenarioKnobs,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "scheduler_names", "has_storm"),
+                   static_argnames=("cfg", "scheduler_names", "has_storm",
+                                    "table", "lane_scheds"),
                    donate_argnames=("state",))
 def run_scenarios_jit(state: SimState, windows: EventWindow,
                       knobs: ScenarioKnobs, cfg: SimConfig,
                       scheduler_names: Tuple[str, ...], seed: int = 0,
-                      has_storm: bool = True):
+                      has_storm: bool = True,
+                      table: Optional[DispatchTable] = None,
+                      lane_scheds: Optional[Tuple[int, ...]] = None):
     """Donating fleet entry point: the (B, max_tasks, ...) tables of
     ``state`` back the output lanes instead of being double-buffered —
     thread the returned state; do not reuse the argument."""
     return run_scenarios(state, windows, knobs, cfg, scheduler_names, seed,
-                         has_storm)
+                         has_storm, table, lane_scheds)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",),
@@ -254,7 +341,8 @@ def resync_fleet_jit(state: SimState, cfg: SimConfig) -> SimState:
 def run_scenarios_sharded(state: SimState, windows: EventWindow,
                           knobs: ScenarioKnobs, cfg: SimConfig,
                           scheduler_names: Tuple[str, ...], mesh: Mesh,
-                          seed: int = 0, has_storm: bool = True
+                          seed: int = 0, has_storm: bool = True,
+                          table: Optional[DispatchTable] = None
                           ) -> Tuple[SimState, Dict[str, jax.Array]]:
     """``run_scenarios`` with the scenario axis split over a device mesh.
 
@@ -263,6 +351,11 @@ def run_scenarios_sharded(state: SimState, windows: EventWindow,
     device; the (W, B, ...) stats gather back along axis 1. Each shard runs
     the plain vmapped program on its B/n local lanes with the same RNG key
     schedule, so per-lane results match the single-device path exactly.
+
+    The shard body is traced once for every shard, so per-lane STATIC
+    scheduler grouping is unavailable — sharded fleets always dispatch
+    through the ``lax.switch`` path (``cfg.sched_dispatch='table'`` raises
+    here; lane trajectories are bitwise-identical either way).
     """
     shard_map, check_kw = import_shard_map()
     B = jax.tree.leaves(state)[0].shape[0]
@@ -270,9 +363,15 @@ def run_scenarios_sharded(state: SimState, windows: EventWindow,
     if B % n_dev:
         raise ValueError(f"B={B} lanes not divisible by the {n_dev}-device "
                          f"'{FLEET_AXIS}' mesh axis — pad the spec list")
+    if cfg.sched_dispatch == "table":
+        raise ValueError(
+            "cfg.sched_dispatch='table' is incompatible with mesh-sharded "
+            "fleets (one shard_map trace serves every shard, so there is "
+            "no static per-lane scheduler assignment) — use 'auto'")
 
     def body(s, w, k):
-        return run_scenarios(s, w, k, cfg, scheduler_names, seed, has_storm)
+        return run_scenarios(s, w, k, cfg, scheduler_names, seed, has_storm,
+                             table)
 
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(FLEET_AXIS), P(), P(FLEET_AXIS)),
@@ -283,11 +382,12 @@ def run_scenarios_sharded(state: SimState, windows: EventWindow,
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "scheduler_names", "mesh",
-                                    "has_storm"),
+                                    "has_storm", "table"),
                    donate_argnames=("state",))
 def run_scenarios_sharded_jit(state: SimState, windows: EventWindow,
                               knobs: ScenarioKnobs, cfg: SimConfig,
                               scheduler_names: Tuple[str, ...], mesh: Mesh,
-                              seed: int = 0, has_storm: bool = True):
+                              seed: int = 0, has_storm: bool = True,
+                              table: Optional[DispatchTable] = None):
     return run_scenarios_sharded(state, windows, knobs, cfg, scheduler_names,
-                                 mesh, seed, has_storm)
+                                 mesh, seed, has_storm, table)

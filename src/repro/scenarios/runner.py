@@ -43,6 +43,7 @@ from repro.core.snapshot import load_snapshot, save_snapshot
 from repro.scenarios import batch as batch_mod
 from repro.scenarios.report import scenario_report
 from repro.scenarios.spec import ScenarioSpec, build_knobs
+from repro.sched import snapshot_dispatch
 
 
 class ScenarioFleet(WindowedDriver):
@@ -83,6 +84,15 @@ class ScenarioFleet(WindowedDriver):
         # eviction-storm pass (and its accounting debits) entirely
         self._has_storm = any(s.evict_storm_frac > 0.0 for s in lanes)
         self.knobs, self.scheduler_names = build_knobs(lanes)
+        # Dispatch contract, frozen NOW: the registry rows this fleet's
+        # scheduler indices point at. Plugins registered after construction
+        # cannot retarget them (regression-tested). The static per-lane
+        # scheduler map enables switchless dispatch on the unsharded path
+        # (sharded bodies are traced once for all shards — they keep the
+        # lax.switch fallback).
+        self.dispatch_table = snapshot_dispatch(self.scheduler_names)
+        self._lane_scheds = None if mesh is not None else tuple(
+            self.scheduler_names.index(s.scheduler) for s in lanes)
         self.knobs = batch_mod.shard_over_fleet(self.knobs, mesh)
         self.state = batch_mod.init_batched_state(cfg, len(lanes), mesh)
 
@@ -129,11 +139,12 @@ class ScenarioFleet(WindowedDriver):
             self.state, stats = batch_mod.run_scenarios_sharded_jit(
                 self.state, batch, self.knobs, self.cfg,
                 self.scheduler_names, self.mesh, seed,
-                has_storm=self._has_storm)
+                has_storm=self._has_storm, table=self.dispatch_table)
         else:
             self.state, stats = batch_mod.run_scenarios_jit(
                 self.state, batch, self.knobs, self.cfg,
-                self.scheduler_names, seed, has_storm=self._has_storm)
+                self.scheduler_names, seed, has_storm=self._has_storm,
+                table=self.dispatch_table, lane_scheds=self._lane_scheds)
         if self.n_lanes != self.n_scenarios:
             stats = jax.tree.map(lambda x: x[:, :self.n_scenarios], stats)
         return stats

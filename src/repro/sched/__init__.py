@@ -10,8 +10,12 @@ Layout (one concern per module):
   metaheuristics.py  SA / tabu / GA sharing one argmax-placement surrogate
   commit.py          the capacity-checked finaliser (no proposal can
                      overcommit a node) — kernels/placement_commit inside
+  table.py           the proposal table: TableForm score transforms +
+                     DispatchTable snapshots + the fleet's switchless
+                     (grouped, optionally kernel-fused) dispatch
   registry.py        register_scheduler(): plug in new schedulers by name;
-                     SCHEDULERS / PROPOSERS / DYNAMIC_BESTFIT are derived
+                     SCHEDULERS / PROPOSERS / DYNAMIC_BESTFIT / TABLE_FORMS
+                     are derived; snapshot_dispatch() freezes fleet tables
 
 Every scheduler is pure-JAX with signature ``(state, cfg, rng) -> state``
 and is vmap-able: hundreds of scheduler replicas can consume one workload in
@@ -24,11 +28,16 @@ plugin API and README "Scheduler registry" for a worked example.
 extraction for one release has been removed — import from here.)
 """
 from repro.sched.base import NEG, base_pass, pending_batch
-from repro.sched.commit import finalize
+from repro.sched.commit import apply_commit, commit_operands, finalize
+from repro.sched.table import (DispatchTable, SchedContext, TableForm,
+                               context_from_state, make_switchless_dispatch,
+                               tf_node_order, tf_random, tf_scores)
 from repro.sched.registry import (DYNAMIC_BESTFIT, PROPOSERS, SCHEDULERS,
-                                  SchedulerEntry, describe_schedulers,
-                                  get_entry, get_scheduler, list_schedulers,
-                                  register_scheduler, unregister_scheduler)
+                                  TABLE_FORMS, SchedulerEntry,
+                                  describe_schedulers, get_entry,
+                                  get_scheduler, list_schedulers,
+                                  register_scheduler, snapshot_dispatch,
+                                  unregister_scheduler)
 
 # importing the built-in modules registers them (order fixes registry order)
 from repro.sched.heuristics import (first_fit, greedy, propose_first_fit,
@@ -39,13 +48,20 @@ from repro.sched.metaheuristics import (argmax_surrogate, balance_objective,
                                         genetic, propose_genetic,
                                         propose_simulated_annealing,
                                         propose_tabu_search,
-                                        simulated_annealing, tabu_search)
+                                        simulated_annealing, tabu_search,
+                                        tf_genetic, tf_simulated_annealing,
+                                        tf_tabu_search)
 
 __all__ = [
-    "NEG", "base_pass", "pending_batch", "finalize",
-    "SCHEDULERS", "PROPOSERS", "DYNAMIC_BESTFIT", "SchedulerEntry",
-    "register_scheduler", "unregister_scheduler", "get_scheduler",
-    "get_entry", "list_schedulers", "describe_schedulers",
+    "NEG", "base_pass", "pending_batch", "finalize", "commit_operands",
+    "apply_commit",
+    "SCHEDULERS", "PROPOSERS", "DYNAMIC_BESTFIT", "TABLE_FORMS",
+    "SchedulerEntry", "register_scheduler", "unregister_scheduler",
+    "get_scheduler", "get_entry", "list_schedulers", "describe_schedulers",
+    "snapshot_dispatch",
+    "DispatchTable", "SchedContext", "TableForm", "context_from_state",
+    "make_switchless_dispatch", "tf_scores", "tf_node_order", "tf_random",
+    "tf_simulated_annealing", "tf_tabu_search", "tf_genetic",
     "greedy", "first_fit", "round_robin", "random_fit",
     "simulated_annealing", "tabu_search", "genetic",
     "propose_greedy", "propose_first_fit", "propose_round_robin",

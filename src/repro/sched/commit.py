@@ -20,6 +20,18 @@ from repro.core.state import SimState, TASK_RUNNING
 from repro.kernels.placement_commit.ops import placement_commit
 
 
+def commit_operands(state: SimState, cfg: SimConfig, idx):
+    """The commit kernel's node/request operands derived from sim state:
+    (total (N, R) with inactive nodes folded to -1, denom (N, R) best-fit
+    normaliser, req (P, R) gathered requests). Shared by :func:`finalize`
+    and the fleet's switchless dispatch, so both paths feed the kernel the
+    same bits."""
+    total = jnp.where(state.node_active[:, None], state.node_total, -1.0)
+    denom = jnp.maximum(state.node_total, 1e-6)
+    req = state.task_req[idx]                                   # (P, R)
+    return total, denom, req
+
+
 def finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
              dynamic_bestfit=False) -> SimState:
     """Sequential capacity-checked assignment in priority order.
@@ -36,15 +48,23 @@ def finalize(state: SimState, cfg: SimConfig, idx, valid, base_ok, pref,
     scattered into node_used — O(P) work replacing the engine's post-commit
     O(max_tasks) segment-sum recompute.
     """
-    total = jnp.where(state.node_active[:, None], state.node_total, -1.0)
-    denom = jnp.maximum(state.node_total, 1e-6)
-    req = state.task_req[idx]                                   # (P, R)
+    total, denom, req = commit_operands(state, cfg, idx)
 
     node_of, tally = placement_commit(pref, req, base_ok, valid, total, denom,
                                       state.node_reserved, dynamic_bestfit,
                                       use_kernel=cfg.use_kernels,
+                                      tile_p=cfg.commit_tile_p or None,
+                                      stream_n=cfg.commit_tile_n or None,
                                       return_tally=True)
+    return apply_commit(state, cfg, idx, node_of, tally)
 
+
+def apply_commit(state: SimState, cfg: SimConfig, idx, node_of,
+                 tally) -> SimState:
+    """Fold a commit result (node_of (P,) i32, tally (N, R) f32) back into
+    the sim state — the back half of :func:`finalize`, split out so the
+    fleet's switchless dispatch can run the batched fused commit kernel
+    between the two halves."""
     placed = node_of >= 0
     task_state = state.task_state.at[idx].set(
         jnp.where(placed, TASK_RUNNING, state.task_state[idx]).astype(jnp.int8))

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.sched.registry import register_scheduler
+from repro.sched.table import (FAM_NODE_ORDER, FAM_SCORES, TableForm,
+                               tf_node_order, tf_random, tf_scores)
 
 
 def propose_greedy(state, cfg, rng, idx, valid, base_ok, scores):
@@ -39,13 +41,25 @@ def propose_random(state, cfg, rng, idx, valid, base_ok, scores):
     return jax.random.uniform(rng, base_ok.shape)
 
 
+# Table forms make these switchless in fleets (sched.table): greedy fuses
+# as the score family, first_fit/round_robin as node-order rotations (rot=0
+# / rot=131 — ``start = (window * rot) % N`` reproduces the proposals
+# bitwise), random stays an external (rng-derived) form.
 greedy = register_scheduler("greedy", propose_greedy, dynamic_bestfit=True,
                             doc="Best-fit decreasing: tightest feasible "
-                                "node, re-scored dynamically.")
+                                "node, re-scored dynamically.",
+                            table_form=TableForm(tf_scores,
+                                                 fused=FAM_SCORES))
 first_fit = register_scheduler("first_fit", propose_first_fit,
-                               doc="First-fit: lowest-index feasible node.")
+                               doc="First-fit: lowest-index feasible node.",
+                               table_form=TableForm(tf_node_order, (0.0,),
+                                                    FAM_NODE_ORDER))
 round_robin = register_scheduler("round_robin", propose_round_robin,
                                  doc="Round-robin over node indices, "
-                                     "rotating start per window.")
+                                     "rotating start per window.",
+                                 table_form=TableForm(tf_node_order,
+                                                      (131.0,),
+                                                      FAM_NODE_ORDER))
 random_fit = register_scheduler("random", propose_random,
-                                doc="Random feasible node (uniform draw).")
+                                doc="Random feasible node (uniform draw).",
+                                table_form=TableForm(tf_random))

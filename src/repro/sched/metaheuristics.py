@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.sched.base import NEG
 from repro.sched.registry import register_scheduler
+from repro.sched.table import SchedContext, TableForm, context_from_state
 
 
 def balance_objective(reserved, total, active):
@@ -24,6 +25,25 @@ def balance_objective(reserved, total, active):
     na = jnp.maximum(active.sum(), 1)
     mu = f.sum() / na
     return jnp.where(active, (f - mu) ** 2, 0.0).sum() / na
+
+
+def _surrogate(req, node_reserved, node_total, node_active, valid, base_ok):
+    """Array-level core of :func:`argmax_surrogate` — also reachable from a
+    :class:`SchedContext` (switchless table forms), which carries exactly
+    these slices."""
+    N = base_ok.shape[1]
+    weight = (valid & base_ok.any(1))[:, None]
+
+    def trial_reserved(pref_m):
+        choice = jnp.argmax(jnp.where(base_ok, pref_m, NEG), axis=1)
+        onehot = jax.nn.one_hot(choice, N, dtype=jnp.float32) * weight
+        return node_reserved + onehot.T @ req
+
+    def energy(pref_m):
+        return balance_objective(trial_reserved(pref_m), node_total,
+                                 node_active)
+
+    return trial_reserved, energy
 
 
 def argmax_surrogate(state, idx, valid, base_ok):
@@ -36,30 +56,23 @@ def argmax_surrogate(state, idx, valid, base_ok):
     energy(pref_m): post-placement reservation balance of that trial
     (lower = better). GA fitness is its negation.
     """
-    N = base_ok.shape[1]
-    weight = (valid & base_ok.any(1))[:, None]
-    req = state.task_req[idx]
-
-    def trial_reserved(pref_m):
-        choice = jnp.argmax(jnp.where(base_ok, pref_m, NEG), axis=1)
-        onehot = jax.nn.one_hot(choice, N, dtype=jnp.float32) * weight
-        return state.node_reserved + onehot.T @ req
-
-    def energy(pref_m):
-        return balance_objective(trial_reserved(pref_m), state.node_total,
-                                 state.node_active)
-
-    return trial_reserved, energy
+    return _surrogate(state.task_req[idx], state.node_reserved,
+                      state.node_total, state.node_active, valid, base_ok)
 
 
-def propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
-                                scores, n_steps: int = 64, t0: float = 0.1):
-    """Anneal a random feasible preference toward balanced placements.
-    Objective: post-placement reservation balance."""
-    P, N = base_ok.shape
+def _ctx_surrogate(ctx: SchedContext):
+    return _surrogate(ctx.req, ctx.node_reserved, ctx.node_total,
+                      ctx.node_active, ctx.valid, ctx.base_ok)
+
+
+def tf_simulated_annealing(cfg, ctx: SchedContext, rng, params):
+    """Table form of :func:`propose_simulated_annealing` — identical search
+    over the shared base-pass context; params = (n_steps, t0)."""
+    n_steps, t0 = int(params[0]), float(params[1])
+    P, N = ctx.base_ok.shape
     k_init, k_steps = jax.random.split(rng)
     pref = jax.random.uniform(k_init, (P, N))
-    _, energy = argmax_surrogate(state, idx, valid, base_ok)
+    _, energy = _ctx_surrogate(ctx)
 
     def body(i, carry):
         pref_m, e, key = carry
@@ -80,16 +93,24 @@ def propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
     return pref
 
 
-def propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores,
-                        n_steps: int = 48, tenure: int = 8):
-    """Tabu search (paper §IV names it among the MASB schedulers): greedy
-    local moves on the preference surrogate with a short-term memory that
-    forbids revisiting recently-touched (task) coordinates."""
-    P, N = base_ok.shape
+def propose_simulated_annealing(state, cfg, rng, idx, valid, base_ok,
+                                scores, n_steps: int = 64, t0: float = 0.1):
+    """Anneal a random feasible preference toward balanced placements.
+    Objective: post-placement reservation balance."""
+    ctx = context_from_state(state, idx, valid, base_ok, scores)
+    return tf_simulated_annealing(cfg, ctx, rng, (n_steps, t0))
+
+
+def tf_tabu_search(cfg, ctx: SchedContext, rng, params):
+    """Table form of :func:`propose_tabu_search`; params = (n_steps,
+    tenure)."""
+    n_steps, tenure = int(params[0]), int(params[1])
+    P, N = ctx.base_ok.shape
+    scores = ctx.scores
     k_init, k_steps = jax.random.split(rng)
     pref = jnp.where(jnp.isfinite(scores), scores, 0.0) + \
         0.01 * jax.random.uniform(k_init, (P, N))
-    _, energy = argmax_surrogate(state, idx, valid, base_ok)
+    _, energy = _ctx_surrogate(ctx)
 
     def body(i, carry):
         pref_m, e_best, best, tabu_until, key = carry
@@ -115,18 +136,27 @@ def propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores,
     return best
 
 
-def propose_genetic(state, cfg, rng, idx, valid, base_ok, scores,
-                    pop: int = 8, gens: int = 4, mut_rate: float = 0.15):
-    """Small GA over preference matrices (the paper's 4 GA variants, seeded
-    and unseeded, distilled): tournament-free truncation selection + mutation;
-    fitness = placement balance of the argmax surrogate."""
-    P, N = base_ok.shape
+def propose_tabu_search(state, cfg, rng, idx, valid, base_ok, scores,
+                        n_steps: int = 48, tenure: int = 8):
+    """Tabu search (paper §IV names it among the MASB schedulers): greedy
+    local moves on the preference surrogate with a short-term memory that
+    forbids revisiting recently-touched (task) coordinates."""
+    ctx = context_from_state(state, idx, valid, base_ok, scores)
+    return tf_tabu_search(cfg, ctx, rng, (n_steps, tenure))
+
+
+def tf_genetic(cfg, ctx: SchedContext, rng, params):
+    """Table form of :func:`propose_genetic`; params = (pop, gens,
+    mut_rate)."""
+    pop, gens, mut_rate = int(params[0]), int(params[1]), float(params[2])
+    P, N = ctx.base_ok.shape
+    scores = ctx.scores
     keys = jax.random.split(rng, pop + 1)
     population = jax.vmap(lambda k: jax.random.uniform(k, (P, N)))(keys[:pop])
     # seed one individual with the best-fit scores (the paper's 'seeded GA')
     population = population.at[0].set(
         jnp.where(jnp.isfinite(scores), scores, 0.0))
-    _, energy = argmax_surrogate(state, idx, valid, base_ok)
+    _, energy = _ctx_surrogate(ctx)
 
     def fitness(pref_m):
         return -energy(pref_m)
@@ -150,12 +180,29 @@ def propose_genetic(state, cfg, rng, idx, valid, base_ok, scores,
     return population[jnp.argmax(fit)]
 
 
+def propose_genetic(state, cfg, rng, idx, valid, base_ok, scores,
+                    pop: int = 8, gens: int = 4, mut_rate: float = 0.15):
+    """Small GA over preference matrices (the paper's 4 GA variants, seeded
+    and unseeded, distilled): tournament-free truncation selection + mutation;
+    fitness = placement balance of the argmax surrogate."""
+    ctx = context_from_state(state, idx, valid, base_ok, scores)
+    return tf_genetic(cfg, ctx, rng, (pop, gens, mut_rate))
+
+
+# All three are external table forms (rng-driven searches — nothing for the
+# fused kernel to derive from scores alone), but registering them makes
+# mixed fleets switchless: a lane's SA/tabu/GA loop runs over ONLY the
+# lanes that asked for it instead of taxing every lane through the vmapped
+# lax.switch. params mirror the propose_* defaults.
 simulated_annealing = register_scheduler(
     "simulated_annealing", propose_simulated_annealing,
-    doc="Simulated annealing toward balanced placements.")
+    doc="Simulated annealing toward balanced placements.",
+    table_form=TableForm(tf_simulated_annealing, (64.0, 0.1)))
 tabu_search = register_scheduler(
     "tabu_search", propose_tabu_search,
-    doc="Tabu search with short-term move memory.")
+    doc="Tabu search with short-term move memory.",
+    table_form=TableForm(tf_tabu_search, (48.0, 8.0)))
 genetic = register_scheduler(
     "genetic", propose_genetic,
-    doc="Genetic algorithm over preference matrices (seeded GA).")
+    doc="Genetic algorithm over preference matrices (seeded GA).",
+    table_form=TableForm(tf_genetic, (8.0, 4.0, 0.15)))
