@@ -38,6 +38,15 @@ zlib stream. The flat legacy layout (``shard_windows=0``) streams too, by
 spooling per-field raw bytes to temp files on disk (O(trace) disk, still
 O(chunk) RAM) before wrapping them in npy members.
 
+**Writes are crash-safe, reads are verifiable.** The writer lands in a
+uniquely-named temp file and atomically renames after an fsync — an
+interrupted precompile leaves nothing at the target path. Every data member
+gets a crc32 (of its decompressed npy bytes) embedded in the meta;
+:func:`verify_stack` / ``validate_replay(verify=True)`` /
+``replay_windows(verify=True)`` check them and report corruption *by chunk
+index* (truncated, bit-flipped and unreadable members alike), eagerly, on
+the caller's thread.
+
 The parser's anomaly counters (``ParseStats``) are persisted into the
 stack's meta — at 12.5K-node scale a silent ``slot_overflow`` means dropped
 tasks and corrupt results, so :func:`stack_parse_stats` lets any replay
@@ -50,6 +59,7 @@ import os
 import shutil
 import tempfile
 import zipfile
+import zlib
 from typing import Iterable, Iterator, List, Optional
 
 import numpy as np
@@ -57,6 +67,13 @@ from numpy.lib import format as _npformat
 
 from repro.config import SimConfig
 from repro.core.events import EventWindow, empty_window, stack_windows
+from repro.resilience.faults import maybe_corrupt, maybe_fault
+
+
+class StackCorruptionError(ValueError):
+    """A pre-compiled stack failed an integrity check — the error message
+    names the corrupt chunk/member so the operator knows exactly which bytes
+    rotted instead of chasing a mis-simulation."""
 
 # config fields that must match between the writer and the consumer for the
 # tensor layout (and the injection slot-pool contract) to line up
@@ -98,6 +115,29 @@ def _append_parse_stats(tmp: str, stats):
         _write_member(zf, "meta/parse_stats", vals)
 
 
+def _append_member_crcs(tmp: str):
+    """Embed a crc32 per data member (of its *decompressed* npy bytes).
+
+    Appended after the data members, one member read back at a time (O(one
+    member) host memory — the streaming writer's bound survives). The zip
+    container has its own internal CRCs, but these are ours: readable via
+    :func:`stack_member_crcs` without decompressing anything, and verified
+    chunk-by-chunk by :func:`verify_stack` so a corrupt chunk is reported
+    *by index* instead of surfacing as a generic zlib error mid-replay.
+    """
+    with zipfile.ZipFile(tmp) as zf:
+        names = [i.filename for i in zf.infolist()
+                 if i.filename.startswith("w/")]
+        crcs = [zlib.crc32(zf.read(n)) for n in names]
+    if not names:                              # empty stack: nothing to sum
+        return
+    keys = np.asarray([n[:-len(".npy")] for n in names])
+    vals = np.asarray(crcs, np.int64)
+    with zipfile.ZipFile(tmp, "a", zipfile.ZIP_DEFLATED) as zf:
+        _write_member(zf, "meta/member_crc_names", keys)
+        _write_member(zf, "meta/member_crc", vals)
+
+
 def _append_byte_index(tmp: str):
     """Embed each data member's (header_offset, compressed_size) span.
 
@@ -136,9 +176,11 @@ def _chunked(stream: Iterable[EventWindow], size: int
     for w in stream:
         buf.append(w)
         if len(buf) == size:
+            maybe_fault("precompile_write")    # chaos: die mid-archive
             yield buf
             buf = []
     if buf:
+        maybe_fault("precompile_write")
         yield buf
 
 
@@ -252,9 +294,22 @@ def precompile_stream(cfg: SimConfig, stream: Iterable[EventWindow],
     ``streaming=False`` is the legacy materialise-everything writer — both
     produce bitwise-identical archives. ``parse_stats`` (a ParseStats) is
     embedded into the meta after the stream is exhausted.
+
+    The write is **crash-safe**: everything lands in a uniquely-named temp
+    file in the target directory, fsync'd, then atomically renamed into
+    place — a crash (or an armed ``precompile_write`` fault) at any point
+    leaves *no file at the target path*, so a partial stack can never
+    masquerade as a complete one. Per-member crc32s are embedded last (see
+    :func:`verify_stack`).
     """
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    tmp = out_path + ".tmp"
+    out_dir = os.path.dirname(out_path) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    # unique temp name (mkstemp) so concurrent writers never clobber each
+    # other's half-written archives; same directory so the rename is atomic
+    fd, tmp = tempfile.mkstemp(dir=out_dir,
+                               prefix=os.path.basename(out_path) + ".",
+                               suffix=".tmp")
+    os.close(fd)
     try:
         if streaming:
             _write_stack_streaming(tmp, cfg, stream, n_windows,
@@ -264,7 +319,18 @@ def precompile_stream(cfg: SimConfig, stream: Iterable[EventWindow],
         if parse_stats is not None:
             _append_parse_stats(tmp, parse_stats)
         _append_byte_index(tmp)
+        _append_member_crcs(tmp)
+        with open(tmp, "rb+") as f:
+            os.fsync(f.fileno())
         os.replace(tmp, out_path)
+        try:                                   # persist the rename itself
+            dfd = os.open(out_dir, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass                               # platform without dir fsync
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -406,6 +472,83 @@ def overflow_warning(stats) -> Optional[str]:
     return "WARNING: " + "; ".join(parts)
 
 
+def stack_member_crcs(path: str) -> Optional[dict]:
+    """member name -> crc32 of its decompressed npy bytes (None for stacks
+    written before checksums were embedded)."""
+    with np.load(path, mmap_mode="r") as z:
+        if "meta/member_crc" not in z.files:
+            return None
+        names = [str(s) for s in z["meta/member_crc_names"]]
+        vals = [int(v) for v in z["meta/member_crc"]]
+    return dict(zip(names, vals))
+
+
+def _member_label(name: str) -> str:
+    """'w/00002/kind' -> a human label carrying the chunk index."""
+    parts = name.split("/")
+    if len(parts) == 3 and parts[1].isdigit():
+        return f"chunk {int(parts[1])} member {name!r}"
+    return f"member {name!r}"
+
+
+def _chunk_member_names(path: str, lo: Optional[int],
+                        hi: Optional[int]) -> List[str]:
+    """Data members overlapping windows [lo, hi) (all of them when the
+    bounds are None or the stack is flat)."""
+    with np.load(path, mmap_mode="r") as z:
+        layout = _Layout(z)
+        if layout.starts is None or lo is None or hi is None:
+            return [k for k in z.files if k.startswith("w/")]
+        starts = layout.starts
+        c0 = max(0, int(np.searchsorted(starts, lo, side="right")) - 1)
+        names = []
+        for c in range(c0, len(starts) - 1):
+            if int(starts[c]) >= hi:
+                break
+            names += [_chunk_key(c, f) for f in EventWindow._fields]
+        return names
+
+
+def verify_stack(path: str, lo: Optional[int] = None,
+                 hi: Optional[int] = None):
+    """Check the embedded per-member crc32s (optionally only the chunks
+    overlapping windows [lo, hi)). Raises :class:`StackCorruptionError`
+    naming the corrupt chunk — truncated, bit-flipped and unreadable members
+    all surface with their index, eagerly, instead of as a generic zlib
+    error (or worse, silence) mid-replay."""
+    crcs = stack_member_crcs(path)
+    if crcs is None:
+        raise ValueError(f"stack {path} has no embedded member checksums "
+                         f"(written before crc32 meta) — re-run "
+                         f"precompile_trace to verify integrity")
+    names = _chunk_member_names(path, lo, hi)
+    try:
+        zf = zipfile.ZipFile(path)
+    except zipfile.BadZipFile as e:
+        raise StackCorruptionError(
+            f"corrupt stack {path}: archive unreadable ({e})") from e
+    with zf:
+        for name in names:
+            want = crcs.get(name)
+            if want is None:
+                raise StackCorruptionError(
+                    f"corrupt stack {path}: {_member_label(name)} has no "
+                    f"recorded checksum")
+            try:
+                data = zf.read(name + ".npy")
+            except Exception as e:             # zlib / zip CRC / truncation
+                raise StackCorruptionError(
+                    f"corrupt stack {path}: {_member_label(name)} "
+                    f"unreadable ({type(e).__name__}: {e})") from e
+            data = maybe_corrupt("chunk_read", data)
+            got = zlib.crc32(data)
+            if got != want:
+                raise StackCorruptionError(
+                    f"corrupt stack {path}: {_member_label(name)} crc32 "
+                    f"{got:#010x} != recorded {want:#010x} — the chunk's "
+                    f"bytes changed since precompile_trace wrote them")
+
+
 def replay_index(path: str) -> dict:
     """The stack's row + byte index (None entries for legacy flat stacks).
 
@@ -425,9 +568,13 @@ def replay_index(path: str) -> dict:
     return out
 
 
-def load_window_range(path: str, lo: int, hi: int) -> EventWindow:
+def load_window_range(path: str, lo: int, hi: int,
+                      verify: bool = False) -> EventWindow:
     """One (hi-lo, ...) stacked EventWindow, decompressing only the chunks
-    that overlap [lo, hi) — the fork-point fast path."""
+    that overlap [lo, hi) — the fork-point fast path. ``verify`` checks the
+    touched chunks' crc32s first (StackCorruptionError names the chunk)."""
+    if verify:
+        verify_stack(path, lo, hi)
     with np.load(path, mmap_mode="r") as z:
         layout = _Layout(z)
         if not 0 <= lo <= hi <= layout.n_windows:
@@ -441,12 +588,17 @@ def load_window_range(path: str, lo: int, hi: int) -> EventWindow:
     return EventWindow(*[np.concatenate(cols) for cols in zip(*pieces)])
 
 
-def validate_replay(path: str, cfg: SimConfig):
+def validate_replay(path: str, cfg: SimConfig, verify: bool = False):
     """Raise if a pre-compiled stack doesn't match ``cfg``'s window layout.
 
     Stacks from before the metadata was embedded are accepted as long as
-    both sides agree there is no injection slot pool.
+    both sides agree there is no injection slot pool. ``verify=True``
+    additionally checks every data member against its embedded crc32
+    (:func:`verify_stack`) — the full-integrity gate before trusting a stack
+    that crossed a network or sat on disk for a month.
     """
+    if verify:
+        verify_stack(path)
     with np.load(path, mmap_mode="r") as z:
         has_meta = any(k == f"meta/{_META_FIELDS[0]}" for k in z.files)
         mismatches = {}
@@ -485,7 +637,8 @@ def replay_config(path: str, cfg: SimConfig) -> SimConfig:
 
 def replay_windows(path: str, batch: int = 32,
                    n_windows: Optional[int] = None,
-                   start_window: int = 0) -> Iterator[EventWindow]:
+                   start_window: int = 0,
+                   verify: bool = False) -> Iterator[EventWindow]:
     """Stream (batch, ...) stacks straight from the persisted tensors (zero
     parsing), optionally truncated to ``n_windows`` windows starting at
     ``start_window``. On a chunked stack only the chunks overlapping the
@@ -496,7 +649,10 @@ def replay_windows(path: str, batch: int = 32,
     typo'd ``--start-window`` must not look like an empty trace. The check
     is eager (this is a plain function returning a generator), so callers
     that hand the stream to a prefetcher thread still fail on *their*
-    thread, at call time.
+    thread, at call time. ``verify=True`` is just as eager: the requested
+    range's chunks are checksum-verified *here*, before a single window is
+    yielded, so a corrupt chunk fails the caller with its index instead of
+    crashing a prefetcher thread mid-run.
     """
     if start_window < 0:
         raise ValueError(f"start_window={start_window} must be >= 0")
@@ -505,6 +661,9 @@ def replay_windows(path: str, batch: int = 32,
         raise ValueError(
             f"start_window={start_window} outside the stack's "
             f"[0, {n}) — nothing left to replay")
+    if verify:
+        hi = n if n_windows is None else min(n, start_window + n_windows)
+        verify_stack(path, start_window, hi)
     return _replay_iter(path, batch, n_windows, start_window)
 
 

@@ -11,12 +11,23 @@ newer SimConfig schema still loads — unknown keys are filtered out (and
 surfaced in ``Snapshot.extra["dropped_cfg_keys"]``), missing keys take the
 current dataclass defaults. The caller-supplied ``extra`` metadata dict is
 returned as written (it used to be silently dropped).
+
+**Checksum-on-save / verify-on-restore.** ``save_snapshot`` records a crc32
+per state field in the meta; ``load_snapshot`` verifies them (on by
+default — the arrays are already in memory, so the check is one cheap pass)
+and raises :class:`SnapshotCorruptionError` *naming the corrupt field*. The
+write itself goes through a uniquely-named temp file, fsync, then an atomic
+rename — a crash mid-save can never leave a torn snapshot at the target
+path, matching the pre-compiled-stack contract in ``core.precompile``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import tempfile
+import zipfile
+import zlib
 from typing import NamedTuple, Optional
 
 import jax
@@ -24,6 +35,12 @@ import numpy as np
 
 from repro.config import SimConfig
 from repro.core.state import SimState
+from repro.resilience.faults import maybe_fault
+
+
+class SnapshotCorruptionError(ValueError):
+    """A snapshot failed its crc32 verification — the message names the
+    corrupt state field."""
 
 
 class Snapshot(NamedTuple):
@@ -36,15 +53,29 @@ class Snapshot(NamedTuple):
 
 def save_snapshot(path: str, state: SimState, cfg: SimConfig,
                   windows_done: int = 0, extra: Optional[dict] = None):
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    out_dir = os.path.dirname(path) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    # np.asarray, NOT ascontiguousarray: the latter promotes 0-d scalar
+    # counters to shape (1,), breaking bitwise state equality after restore.
     arrays = {f"state/{f}": np.asarray(getattr(state, f))
               for f in SimState._fields}
+    crc = {f: zlib.crc32(arrays[f"state/{f}"].tobytes())
+           for f in SimState._fields}
     meta = {"cfg": dataclasses.asdict(cfg), "windows_done": windows_done,
-            "extra": extra or {}}
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, __meta__=json.dumps(meta), **arrays)
-    os.replace(tmp, path)                      # atomic publish
+            "extra": extra or {}, "crc": crc}
+    fd, tmp = tempfile.mkstemp(dir=out_dir,
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)                  # atomic publish
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def config_from_meta(cfg_meta: dict) -> "tuple[SimConfig, list]":
@@ -59,11 +90,33 @@ def config_from_meta(cfg_meta: dict) -> "tuple[SimConfig, list]":
     return cfg, dropped
 
 
-def load_snapshot(path: str) -> Snapshot:
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["__meta__"]))
-        fields = {f: jax.numpy.asarray(z[f"state/{f}"])
-                  for f in SimState._fields}
+def load_snapshot(path: str, verify: bool = True) -> Snapshot:
+    """Load (and by default crc-verify) a snapshot. Snapshots written before
+    checksums existed load unverified — same drift tolerance as the config.
+    """
+    maybe_fault("snapshot_restore")            # chaos: failed/slow restores
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+            host = {f: np.asarray(z[f"state/{f}"]) for f in SimState._fields}
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, zlib.error, ValueError, OSError) as e:
+        raise SnapshotCorruptionError(
+            f"corrupt snapshot {path}: unreadable archive ({e})") from e
+    crc = meta.get("crc")
+    if verify and crc is not None:
+        for f in SimState._fields:
+            want = crc.get(f)
+            if want is None:
+                continue
+            got = zlib.crc32(host[f].tobytes())
+            if got != want:
+                raise SnapshotCorruptionError(
+                    f"corrupt snapshot {path}: state field {f!r} crc32 "
+                    f"{got:#010x} != recorded {want:#010x} — the bytes "
+                    f"changed since save_snapshot wrote them")
+    fields = {f: jax.numpy.asarray(host[f]) for f in SimState._fields}
     cfg, dropped = config_from_meta(meta["cfg"])
     extra = dict(meta.get("extra") or {})
     if dropped:

@@ -24,9 +24,12 @@ import json
 import tempfile
 import time
 
+import contextlib
+
 from repro.config import REDUCED_SIM, SimConfig
 from repro.core import tracegen
 from repro.core.precompile import precompile_trace
+from repro.resilience import FaultPlan, armed
 from repro.scenarios import ScenarioSpec, format_table
 from repro.service import WhatIfQuery, WhatIfServer
 
@@ -91,6 +94,10 @@ def main(argv=None):
                     help="comma outage fractions for the demo burst")
     ap.add_argument("--json", default=None,
                     help="write rows + metrics JSON here")
+    ap.add_argument("--chaos", default=None,
+                    help="arm a fault plan around the demo burst, e.g. "
+                         "'engine_launch:transient:2,chunk_load:latency:2:0.02'"
+                         " — queries must still succeed (after retries)")
     args = ap.parse_args(argv)
 
     schedulers = args.schedulers.split(",")
@@ -135,11 +142,19 @@ def main(argv=None):
               f"({time.time()-t0:.1f}s)")
 
     queries = demo_queries(args, schedulers, fork_windows)
+    plan = FaultPlan.parse(args.chaos, seed=args.seed) if args.chaos \
+        else None
+    if plan is not None:
+        print(f"chaos armed: {args.chaos}")
     print(f"submitting {len(queries)} concurrent queries ...")
     t0 = time.time()
-    tickets = [server.submit(q) for q in queries]
-    results = [t.wait(timeout=600) for t in tickets]
+    with (armed(plan) if plan is not None else contextlib.nullcontext()):
+        tickets = [server.submit(q) for q in queries]
+        results = [t.wait(timeout=600) for t in tickets]
     wall = time.time() - t0
+    if plan is not None:
+        print(f"chaos fired {len(plan.fired)} faults: "
+              f"{sorted(set(s for s, _, _ in plan.fired))}")
 
     rows = []
     for r in results:
@@ -164,6 +179,10 @@ def main(argv=None):
           f"occupancy {stats['mean_batch_occupancy']:.2f}, "
           f"p50 {stats['latency_p50_s']*1e3:.0f}ms "
           f"p99 {stats['latency_p99_s']*1e3:.0f}ms)")
+    res = stats.get("resilience", {})
+    busy = {k: v for k, v in res.items() if v}
+    print(f"errors by code: {stats.get('errors_by_code') or '{}'}  "
+          f"resilience: {busy or 'all quiet'}")
 
     if args.json:
         with open(args.json, "w") as f:

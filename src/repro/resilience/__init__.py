@@ -1,0 +1,33 @@
+"""Deterministic fault injection + the policies it proves out.
+
+``faults`` is the chaos harness: a seeded :class:`FaultPlan` that opted-in
+call sites (chunk load, engine launch, fork-point restore, batcher loop,
+precompile write) consult through :func:`maybe_fault` / :func:`maybe_corrupt`
+— a single module-global ``None`` check when no plan is armed, so production
+paths pay nothing. ``policy`` is the hardening the harness tests: seeded
+exponential-backoff retry schedules and a CLOSED/OPEN/HALF_OPEN circuit
+breaker.
+
+    from repro.resilience import FaultPlan, armed
+    plan = (FaultPlan(seed=0)
+            .on("engine_launch", "transient", times=2)
+            .on("chunk_load", "latency", times=3, delay_s=0.01))
+    with armed(plan):
+        ...   # the server retries through the injected failures
+
+The chaos acceptance suite lives in tests/test_resilience.py: with faults
+armed the what-if server must shed/retry per policy, the breaker must open
+and recover via a half-open probe, and post-recovery results must stay
+bitwise-identical to an unfaulted run.
+"""
+from repro.resilience.faults import (FaultPlan, FaultSpec, PersistentFault,
+                                     TransientFault, armed, arm, disarm,
+                                     maybe_corrupt, maybe_fault)
+from repro.resilience.policy import (BreakerPolicy, CircuitBreaker,
+                                     RetryPolicy)
+
+__all__ = [
+    "BreakerPolicy", "CircuitBreaker", "FaultPlan", "FaultSpec",
+    "PersistentFault", "RetryPolicy", "TransientFault", "arm", "armed",
+    "disarm", "maybe_corrupt", "maybe_fault",
+]

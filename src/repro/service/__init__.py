@@ -20,15 +20,17 @@ from repro.service.batcher import MicroBatcher, Ticket
 from repro.service.engine_cache import EngineCache
 from repro.service.forkpoint import ForkPointStore, build_fork_points
 from repro.service.metrics import ServiceMetrics
-from repro.service.protocol import (WhatIfQuery, WhatIfResult, decode_query,
+from repro.service.protocol import (ErrorCode, ServingError, WhatIfQuery,
+                                    WhatIfResult, decode_query,
                                     decode_result, encode_query,
                                     encode_result, spec_from_dict,
                                     spec_to_dict)
 from repro.service.server import WhatIfServer
 
 __all__ = [
-    "EngineCache", "ForkPointStore", "MicroBatcher", "ServiceMetrics",
-    "Ticket", "WhatIfQuery", "WhatIfResult", "WhatIfServer",
-    "build_fork_points", "decode_query", "decode_result", "encode_query",
-    "encode_result", "spec_from_dict", "spec_to_dict",
+    "EngineCache", "ErrorCode", "ForkPointStore", "MicroBatcher",
+    "ServiceMetrics", "ServingError", "Ticket", "WhatIfQuery",
+    "WhatIfResult", "WhatIfServer", "build_fork_points", "decode_query",
+    "decode_result", "encode_query", "encode_result", "spec_from_dict",
+    "spec_to_dict",
 ]

@@ -13,6 +13,23 @@ ticket's result) so the batcher is testable without a simulator behind it.
 Execution happens on the batcher thread itself: one device program runs at
 a time, which is the right throughput shape for a single-accelerator
 server and keeps the jit cache / donation story simple.
+
+Failure behaviour is engineered, not incidental:
+
+* **Supervised thread.** The loop runs under a supervisor: a crash (bug or
+  an armed ``batcher_loop`` fault) is counted, the thread state survives on
+  ``self``, and the loop restarts — undispatched tickets stay in their
+  buckets and are re-queued into the next dispatch pass, never lost.
+* **Deadlines.** A ticket whose ``deadline_s`` expired before dispatch is
+  shed with a typed DEADLINE_EXCEEDED result instead of burning a fleet
+  lane on an answer nobody is waiting for.
+* **Cancellation.** ``Ticket.wait(timeout)`` raising ``TimeoutError`` marks
+  the ticket cancelled; the batcher skips it at dispatch (typed CANCELLED).
+* **Bounded queue + priority lane.** With ``max_pending`` set, best-effort
+  (priority 0) submissions beyond the bound are shed immediately (typed
+  SHED); ``priority > 0`` queries bypass the bound and their buckets launch
+  ahead of aged best-effort buckets — the seed of admission control beyond
+  FIFO.
 """
 from __future__ import annotations
 
@@ -21,8 +38,9 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.resilience.faults import maybe_fault
 from repro.service.metrics import ServiceMetrics
-from repro.service.protocol import WhatIfQuery, WhatIfResult
+from repro.service.protocol import (ErrorCode, WhatIfQuery, WhatIfResult)
 
 
 class Ticket:
@@ -37,6 +55,7 @@ class Ticket:
         self.result: Optional[WhatIfResult] = None
         self.t_submit = time.time()
         self.t_start = 0.0             # set when its batch launches
+        self.cancelled = False         # waiter gave up; skip at dispatch
 
     def finish(self, result: WhatIfResult):
         now = time.time()
@@ -47,14 +66,30 @@ class Ticket:
         # record BEFORE waking waiters, so a caller reading metrics right
         # after wait() returns always sees this query counted
         if self.metrics is not None:
-            self.metrics.on_done(result.total_s, result.ok())
+            self.metrics.on_done(result.total_s, result.ok(), result.code)
         self.done.set()
+
+    def fail(self, code: str, error: str):
+        """Finish with a typed error result built from the query."""
+        q = self.query
+        self.finish(WhatIfResult(
+            name=q.spec.name, scheduler=q.spec.scheduler,
+            start_window=q.start_window, n_windows=q.n_windows,
+            row={}, error=error, code=code))
+
+    def expired(self, now: float) -> bool:
+        d = self.query.deadline_s
+        return d is not None and now - self.t_submit >= d
 
     def wait(self, timeout: Optional[float] = None) -> WhatIfResult:
         if not self.done.wait(timeout):
+            # nobody will read the result: tell the batcher not to burn a
+            # fleet lane on it (racing with a concurrent launch is fine —
+            # the flag only matters while the ticket is still undispatched)
+            self.cancelled = True
             raise TimeoutError(
                 f"query {self.query.spec.name!r} still pending after "
-                f"{timeout}s")
+                f"{timeout}s (ticket cancelled)")
         return self.result
 
 
@@ -62,23 +97,33 @@ class MicroBatcher:
 
     def __init__(self, execute_fn: Callable[[List[Ticket]], None],
                  max_lanes: int = 8, max_wait_s: float = 0.05,
-                 metrics: Optional[ServiceMetrics] = None):
+                 metrics: Optional[ServiceMetrics] = None,
+                 max_pending: Optional[int] = None,
+                 max_restarts: int = 100):
         if max_lanes < 1:
             raise ValueError("max_lanes must be >= 1")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending={max_pending} must be >= 1")
+        if max_restarts < 0:
+            raise ValueError(f"max_restarts={max_restarts} must be >= 0")
         self._execute = execute_fn
         self.max_lanes = max_lanes
         self.max_wait_s = max_wait_s
+        self.max_pending = max_pending
+        self.max_restarts = max_restarts
         self.metrics = metrics or ServiceMetrics()
         self._q: "queue.Queue[Ticket]" = queue.Queue()
         self._buckets: Dict[tuple, List[Ticket]] = {}
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._pending_lock = threading.Lock()
+        self._pending = 0              # submitted, not yet pulled for dispatch
 
     def start(self):
         if self._thread is not None:
             raise RuntimeError("batcher already started")
         self._stop.clear()
-        self._thread = threading.Thread(target=self._loop, daemon=True,
+        self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="whatif-batcher")
         self._thread.start()
 
@@ -98,13 +143,71 @@ class MicroBatcher:
             raise RuntimeError("batcher not started")
         t = Ticket(query, self.metrics)
         self.metrics.on_submit()
+        # bounded-queue load shedding: best-effort traffic beyond the bound
+        # is rejected NOW with a typed result; the priority lane is exempt
+        if self.max_pending is not None and query.priority == 0:
+            with self._pending_lock:
+                over = self._pending >= self.max_pending
+                if not over:
+                    self._pending += 1
+            if over:
+                self.metrics.on_shed()
+                t.fail(ErrorCode.SHED,
+                       f"queue full ({self.max_pending} pending); "
+                       f"shed best-effort query {query.spec.name!r}")
+                return t
+        else:
+            with self._pending_lock:
+                self._pending += 1
         self._q.put(t)
         return t
 
+    def pending(self) -> int:
+        with self._pending_lock:
+            return self._pending
+
     # --- batcher thread ------------------------------------------------------
+
+    def _run(self):
+        """Supervisor: restart the loop when it crashes (chaos fault or bug).
+        State lives on ``self``, so undispatched tickets in ``_buckets`` and
+        ``_q`` survive the crash and dispatch on the next pass."""
+        restarts = 0
+        while True:
+            try:
+                self._loop()
+                return                             # clean stop() exit
+            except Exception:                      # noqa: BLE001 — supervisor
+                restarts += 1
+                self.metrics.on_batcher_restart()
+                if restarts > self.max_restarts:
+                    self._fail_all_pending(
+                        f"batcher crash-looped {restarts} times; giving up")
+                    return
+                time.sleep(min(0.5, 0.01 * restarts))   # crash-loop brake
+
+    def _fail_all_pending(self, why: str):
+        while True:
+            try:
+                t = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if t:
+                self._buckets.setdefault(t.query.batch_key(), []).append(t)
+        for ts in self._buckets.values():
+            for t in ts:
+                self._drop_pending(1)
+                if not t.done.is_set():
+                    t.fail(ErrorCode.EXECUTOR_ERROR, why)
+        self._buckets.clear()
+
+    def _drop_pending(self, n: int):
+        with self._pending_lock:
+            self._pending = max(0, self._pending - n)
 
     def _loop(self):
         while True:
+            maybe_fault("batcher_loop")
             timeout = self._next_deadline()
             try:
                 t = self._q.get(timeout=timeout)
@@ -136,9 +239,15 @@ class MicroBatcher:
         oldest = min(ts[0].t_submit for ts in self._buckets.values())
         return max(0.0, oldest + self.max_wait_s - time.time())
 
+    @staticmethod
+    def _bucket_priority(ts: List[Ticket]) -> int:
+        return max(t.query.priority for t in ts)
+
     def _launch_ready(self) -> bool:
         """Launch one bucket if any is full, or aged past max_wait_s, or the
-        batcher is draining on stop. Returns whether one launched."""
+        batcher is draining on stop. Full buckets go first; among aged ones
+        the priority lane wins, then the oldest. Returns whether one was
+        processed (launched, or entirely shed)."""
         now = time.time()
         pick = None
         for key, ts in self._buckets.items():
@@ -146,32 +255,53 @@ class MicroBatcher:
                 pick = key
                 break
             if self._stop.is_set() or now - ts[0].t_submit >= self.max_wait_s:
-                if pick is None or ts[0].t_submit < \
-                        self._buckets[pick][0].t_submit:
+                if pick is None:
                     pick = key
+                else:
+                    best = self._buckets[pick]
+                    cand = (-self._bucket_priority(ts), ts[0].t_submit)
+                    incumbent = (-self._bucket_priority(best),
+                                 best[0].t_submit)
+                    if cand < incumbent:
+                        pick = key
         if pick is None:
             return False
         ts = self._buckets.pop(pick)
         tickets, rest = ts[:self.max_lanes], ts[self.max_lanes:]
         if rest:                     # bucket overfilled between gets — requeue
             self._buckets[pick] = rest
+        self._drop_pending(len(tickets))
+        # dispatch-time shedding: cancelled or past-deadline tickets must not
+        # leak a launched lane — nobody reads those results
+        now = time.time()
+        live: List[Ticket] = []
         for t in tickets:
+            if t.done.is_set():
+                continue
+            if t.cancelled:
+                self.metrics.on_cancelled()
+                t.fail(ErrorCode.CANCELLED,
+                       "caller stopped waiting before dispatch")
+            elif t.expired(now):
+                self.metrics.on_deadline_missed()
+                t.fail(ErrorCode.DEADLINE_EXCEEDED,
+                       f"deadline {t.query.deadline_s}s exceeded after "
+                       f"{now - t.t_submit:.3f}s in queue")
+            else:
+                live.append(t)
+        if not live:
+            return True
+        for t in live:
             t.t_start = time.time()
         try:
-            self._execute(tickets)
+            self._execute(live)
         except Exception as e:              # noqa: BLE001 — server boundary
-            for t in tickets:
+            code = getattr(e, "code", ErrorCode.EXECUTOR_ERROR)
+            for t in live:
                 if not t.done.is_set():
-                    q = t.query
-                    t.finish(WhatIfResult(
-                        name=q.spec.name, scheduler=q.spec.scheduler,
-                        start_window=q.start_window, n_windows=q.n_windows,
-                        row={}, error=f"{type(e).__name__}: {e}"))
-        for t in tickets:
+                    t.fail(code, f"{type(e).__name__}: {e}")
+        for t in live:
             if not t.done.is_set():
-                q = t.query
-                t.finish(WhatIfResult(
-                    name=q.spec.name, scheduler=q.spec.scheduler,
-                    start_window=q.start_window, n_windows=q.n_windows,
-                    row={}, error="executor returned without a result"))
+                t.fail(ErrorCode.NO_RESULT,
+                       "executor returned without a result")
         return True

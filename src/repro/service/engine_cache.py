@@ -30,19 +30,24 @@ from repro.config import SimConfig
 from repro.core.events import EventWindow, empty_window, stack_windows
 from repro.core.precompile import load_window_range
 from repro.core.state import SimState, init_state
+from repro.resilience.faults import maybe_fault
+from repro.resilience.policy import BreakerPolicy, CircuitBreaker
 from repro.scenarios import batch as batch_mod
 from repro.scenarios.spec import ScenarioSpec, build_knobs_for_table
 
 
 class EngineCache:
 
-    def __init__(self, cfg: SimConfig, window_cache_chunks: int = 16):
+    def __init__(self, cfg: SimConfig, window_cache_chunks: int = 16,
+                 verify_chunks: bool = False):
         self.cfg = cfg
+        self.verify_chunks = verify_chunks
         self._template: Optional[SimState] = None
         self._lock = threading.Lock()
         self._windows: "collections.OrderedDict[Tuple, EventWindow]" = \
             collections.OrderedDict()
         self._capacity = max(1, window_cache_chunks)
+        self._breakers: Dict[Tuple, CircuitBreaker] = {}
         self.hits = 0
         self.misses = 0
         self.warmed: set = set()   # (B, W, scheduler_names, has_storm) seen
@@ -77,7 +82,8 @@ class EngineCache:
                 self.hits += 1
                 return self._windows[key]
             self.misses += 1
-        host = load_window_range(path, lo, hi)
+        maybe_fault("chunk_load")          # chaos: latency / transient loads
+        host = load_window_range(path, lo, hi, verify=self.verify_chunks)
         dev = jax.tree.map(lambda x: jnp.array(x, copy=True), host)
         with self._lock:
             self._windows[key] = dev
@@ -89,6 +95,34 @@ class EngineCache:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "cached_chunks": len(self._windows)}
+
+    # --- circuit breakers ----------------------------------------------------
+
+    def breaker(self, key: Tuple, policy: BreakerPolicy,
+                on_transition=None) -> CircuitBreaker:
+        """The per-compiled-program circuit breaker (get-or-create). One
+        breaker guards one warmed (B, W, schedulers, has_storm) entry, so a
+        poisoned program fails fast without condemning the whole server."""
+        with self._lock:
+            b = self._breakers.get(key)
+            if b is None:
+                b = CircuitBreaker(policy, on_transition=on_transition)
+                self._breakers[key] = b
+            return b
+
+    def evict(self, key: Tuple, recompile: bool = True):
+        """Drop a warmed entry so the next launch re-warms it — the
+        breaker's evict-and-recompile hook for poisoned programs. With
+        ``recompile`` (default) the fleet program's jit cache is cleared
+        too, so the half-open probe re-traces and re-XLA-compiles from
+        scratch instead of re-running the executable that just failed
+        k times. (The jit cache is process-global; a breaker trip is a
+        failure path, so the one-off recompile cost is the right trade.)"""
+        self.warmed.discard(key)
+        if recompile:
+            clear = getattr(batch_mod.run_scenarios_jit, "clear_cache", None)
+            if clear is not None:
+                clear()
 
     # --- compilation ---------------------------------------------------------
 

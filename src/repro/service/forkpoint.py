@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.config import SimConfig
 from repro.core.state import SimState
+from repro.resilience.faults import maybe_fault
 from repro.scenarios.spec import ScenarioSpec
 from repro.service.protocol import spec_key
 
@@ -94,6 +95,7 @@ class ForkPointStore:
     def lane_state(self, window: int, lanes: Sequence[int]) -> SimState:
         """(len(lanes), ...) gather of the fork state's lanes (copying —
         the result is handed to a donating launch)."""
+        maybe_fault("fork_restore")        # chaos: failed/slow restores
         state, _ = self.get(window)
         idx = jnp.asarray(list(lanes), jnp.int32)
         return jax.tree.map(lambda x: jnp.array(x[idx], copy=True), state)

@@ -42,22 +42,58 @@ def spec_key(spec: ScenarioSpec):
     return tuple(sorted(d.items()))
 
 
+class ErrorCode:
+    """Typed failure classes a :class:`WhatIfResult` can carry. Everything
+    the server sheds, drops or fails is counted per-code in ServiceMetrics —
+    a failed batch is never invisible in the metrics dump."""
+    INVALID = "INVALID"                        # rejected at submit time
+    DEADLINE_EXCEEDED = "DEADLINE_EXCEEDED"    # shed before launch
+    CANCELLED = "CANCELLED"                    # waiter gave up (wait timeout)
+    SHED = "SHED"                              # bounded queue full
+    BREAKER_OPEN = "BREAKER_OPEN"              # failing fast, program poisoned
+    EXECUTOR_ERROR = "EXECUTOR_ERROR"          # launch failed after retries
+    CHECKSUM_FAILURE = "CHECKSUM_FAILURE"      # corrupt stack chunk detected
+    NO_RESULT = "NO_RESULT"                    # executor returned nothing
+
+
+class ServingError(RuntimeError):
+    """An executor failure carrying a typed :class:`ErrorCode` — the batcher
+    boundary turns it into per-ticket error results counted under that code
+    (anything else is EXECUTOR_ERROR)."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(message)
+        self.code = code
+
+
 @dataclass(frozen=True)
 class WhatIfQuery:
     """One scenario question: simulate ``spec`` over ``n_windows`` windows
     starting at ``start_window`` (0, or a fork-point window — the spec must
-    then match one of the fork snapshot's lanes)."""
+    then match one of the fork snapshot's lanes).
+
+    ``deadline_s`` bounds the query's total latency budget: a ticket still
+    undispatched when it expires is shed with a typed DEADLINE_EXCEEDED
+    result instead of burning a fleet lane on an answer nobody wants.
+    ``priority > 0`` rides the priority lane — never load-shed by the
+    batcher's bounded queue, and its bucket launches ahead of aged
+    best-effort buckets. Neither affects the simulation, so they don't
+    enter ``batch_key()``."""
     spec: ScenarioSpec
     n_windows: int
     start_window: int = 0
     seed: int = 0
     include_curves: bool = False
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         if self.n_windows < 1:
             raise ValueError(f"n_windows={self.n_windows} must be >= 1")
         if self.start_window < 0:
             raise ValueError(f"start_window={self.start_window} must be >= 0")
+        if self.priority < 0:
+            raise ValueError(f"priority={self.priority} must be >= 0")
 
     def batch_key(self):
         """Queries sharing this key may ride one vmapped launch: lanes are
@@ -84,6 +120,7 @@ class WhatIfResult:
     batch_lanes: int = 0          # live lanes in the launch that served this
     batch_size: int = 0           # compiled lane count (incl. padding)
     error: Optional[str] = None
+    code: Optional[str] = None    # ErrorCode.* when error is set
 
     def ok(self) -> bool:
         return self.error is None
@@ -96,16 +133,22 @@ def encode_query(q: WhatIfQuery) -> str:
                        "n_windows": q.n_windows,
                        "start_window": q.start_window,
                        "seed": q.seed,
-                       "include_curves": q.include_curves})
+                       "include_curves": q.include_curves,
+                       "deadline_s": q.deadline_s,
+                       "priority": q.priority})
 
 
 def decode_query(s: str) -> WhatIfQuery:
     d = json.loads(s)
+    deadline = d.get("deadline_s")
     return WhatIfQuery(spec=spec_from_dict(d["spec"]),
                        n_windows=int(d["n_windows"]),
                        start_window=int(d.get("start_window", 0)),
                        seed=int(d.get("seed", 0)),
-                       include_curves=bool(d.get("include_curves", False)))
+                       include_curves=bool(d.get("include_curves", False)),
+                       deadline_s=None if deadline is None else
+                       float(deadline),
+                       priority=int(d.get("priority", 0)))
 
 
 def encode_result(r: WhatIfResult) -> str:
@@ -117,4 +160,5 @@ def encode_result(r: WhatIfResult) -> str:
 def decode_result(s: str) -> WhatIfResult:
     d = json.loads(s)
     d["frame"] = None
+    d.setdefault("code", None)     # results from pre-ErrorCode servers
     return WhatIfResult(**d)

@@ -20,6 +20,7 @@ report columns are means over the decimated sample.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -28,7 +29,10 @@ import numpy as np
 
 from repro.config import SimConfig
 from repro.core.pipeline import restored_resync_phase
-from repro.core.precompile import replay_config, stack_n_windows
+from repro.core.precompile import (StackCorruptionError, replay_config,
+                                   stack_n_windows)
+from repro.resilience.faults import maybe_fault
+from repro.resilience.policy import BreakerPolicy, RetryPolicy
 from repro.scenarios import batch as batch_mod
 from repro.scenarios.report import scenario_report
 from repro.scenarios.spec import ScenarioSpec, build_knobs_for_table
@@ -37,7 +41,8 @@ from repro.service.batcher import MicroBatcher, Ticket
 from repro.service.engine_cache import EngineCache
 from repro.service.forkpoint import ForkPointStore, build_fork_points
 from repro.service.metrics import ServiceMetrics
-from repro.service.protocol import WhatIfQuery, WhatIfResult
+from repro.service.protocol import (ErrorCode, ServingError, WhatIfQuery,
+                                    WhatIfResult)
 
 
 class WhatIfServer:
@@ -47,7 +52,17 @@ class WhatIfServer:
                  max_lanes: int = 8, max_wait_s: float = 0.05,
                  batch_windows: int = 32, seed: int = 0,
                  window_cache_chunks: int = 16,
-                 max_fork_points: Optional[int] = None):
+                 max_fork_points: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[BreakerPolicy] = None,
+                 max_pending: Optional[int] = None,
+                 verify_chunks: bool = False):
+        # retry/breaker config is validated NOW (their __post_init__ raises
+        # on max_retries < 0 etc.) — a bad policy fails server construction,
+        # not the first degraded query
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker_policy = breaker if breaker is not None \
+            else BreakerPolicy()
         # the stack's embedded geometry wins, exactly like `whatif --replay`
         self.cfg = replay_config(replay_path, cfg)
         self.replay_path = replay_path
@@ -65,7 +80,8 @@ class WhatIfServer:
         self.max_lanes = max_lanes
         self.seed = seed
         self.n_stack_windows = stack_n_windows(replay_path)
-        self.engines = EngineCache(self.cfg, window_cache_chunks)
+        self.engines = EngineCache(self.cfg, window_cache_chunks,
+                                   verify_chunks=verify_chunks)
         # bounded: a long-lived trunk with refresh-on-advance must not pin
         # (B, ...) device snapshots forever
         self.forks = ForkPointStore(max_points=max_fork_points)
@@ -73,7 +89,8 @@ class WhatIfServer:
         self.metrics = ServiceMetrics()
         self._batcher = MicroBatcher(self._execute, max_lanes=max_lanes,
                                      max_wait_s=max_wait_s,
-                                     metrics=self.metrics)
+                                     metrics=self.metrics,
+                                     max_pending=max_pending)
         self._started = False
 
     # --- lifecycle -----------------------------------------------------------
@@ -138,6 +155,9 @@ class WhatIfServer:
         return self.submit(query).wait(timeout)
 
     def _validate(self, q: WhatIfQuery) -> Optional[str]:
+        if q.deadline_s is not None and q.deadline_s <= 0:
+            return (f"deadline_s={q.deadline_s} must be > 0 — a non-positive "
+                    f"deadline can never be met")
         if q.spec.scheduler not in self.scheduler_names:
             return (f"scheduler {q.spec.scheduler!r} not in the serving "
                     f"table {list(self.scheduler_names)}")
@@ -165,11 +185,73 @@ class WhatIfServer:
     def _error_result(q: WhatIfQuery, err: str) -> WhatIfResult:
         return WhatIfResult(name=q.spec.name, scheduler=q.spec.scheduler,
                             start_window=q.start_window,
-                            n_windows=q.n_windows, row={}, error=err)
+                            n_windows=q.n_windows, row={}, error=err,
+                            code=ErrorCode.INVALID)
 
     # --- executor (batcher thread) -------------------------------------------
 
+    def _program_key(self) -> Tuple:
+        """The warmed-program identity this server launches (one geometry)."""
+        return (self.max_lanes, self.batch_windows, self.scheduler_names,
+                True)
+
+    def _on_breaker(self, event: str):
+        self.metrics.on_breaker(event)
+        if event == "open":
+            # a program that failed k consecutive launches is treated as
+            # poisoned: evict it so the half-open probe recompiles fresh
+            self.engines.evict(self._program_key())
+
     def _execute(self, tickets: List[Ticket]):
+        """Launch a micro-batch with retries and a circuit breaker.
+
+        A failed attempt relaunches the *whole* batch from scratch — every
+        input (template state, fork snapshots, cached window chunks) is
+        immutable, so pure relaunch is safe even though the in-flight state
+        buffers are donated. Transient launch failures are absorbed by
+        exponential backoff with seeded jitter; exhaustion feeds the
+        per-program circuit breaker, which fails subsequent batches fast
+        (typed BREAKER_OPEN) until a half-open probe succeeds. Checksum
+        failures are never retried — re-reading corrupt bytes cannot fix
+        them.
+        """
+        key = self._program_key()
+        breaker = self.engines.breaker(key, self.breaker_policy,
+                                       on_transition=self._on_breaker)
+        if not breaker.allow():
+            raise ServingError(
+                ErrorCode.BREAKER_OPEN,
+                f"circuit breaker open for the serving program (retry in "
+                f"{breaker.retry_after_s():.2f}s)")
+        delays = self.retry.delays()
+        attempt = 1
+        while True:
+            try:
+                self._run_batch(tickets)
+            except StackCorruptionError as e:
+                self.metrics.on_checksum_failure()
+                breaker.on_failure()
+                raise ServingError(ErrorCode.CHECKSUM_FAILURE, str(e)) from e
+            except ServingError:
+                raise
+            except Exception as e:             # noqa: BLE001 — retry scope
+                self.metrics.on_launch_failure()
+                delay = next(delays, None)
+                if delay is None:
+                    breaker.on_failure()
+                    raise ServingError(
+                        ErrorCode.EXECUTOR_ERROR,
+                        f"launch failed on all {attempt} attempts "
+                        f"({self.retry.max_retries} retries): "
+                        f"{type(e).__name__}: {e}") from e
+                self.metrics.on_retry()
+                attempt += 1
+                time.sleep(delay)
+                continue
+            breaker.on_success()
+            return
+
+    def _run_batch(self, tickets: List[Ticket]):
         queries = [t.query for t in tickets]
         S, N, seed = queries[0].batch_key()
         live = len(queries)
@@ -202,6 +284,7 @@ class WhatIfServer:
         while lo < S + N:
             hi = min(S + N, lo + self.batch_windows)
             windows = self.engines.window_chunk(self.replay_path, lo, hi)
+            maybe_fault("engine_launch")       # chaos: transient launch fail
             state, stats = batch_mod.run_scenarios_jit(
                 state, windows, knobs, self.cfg, self.scheduler_names,
                 seed + lo, has_storm=True)

@@ -1,6 +1,10 @@
 """Chunked pre-compiled stacks: window/byte index, sub-range loads,
-start_window replay, legacy flat-layout compatibility."""
+start_window replay, legacy flat-layout compatibility, and checksum
+verification of corrupted archives (bit rot must fail eagerly, naming the
+corrupt chunk, never surface as a silent mis-simulation)."""
 import os
+import shutil
+import struct
 import tempfile
 import zipfile
 
@@ -9,9 +13,11 @@ import pytest
 
 from repro.config import REDUCED_SIM
 from repro.core.events import EventWindow, stack_windows
-from repro.core.precompile import (load_window_range, precompile_trace,
-                                   replay_index, replay_windows,
-                                   stack_n_windows, validate_replay)
+from repro.core.precompile import (StackCorruptionError, load_window_range,
+                                   precompile_trace, replay_index,
+                                   replay_windows, stack_member_crcs,
+                                   stack_n_windows, validate_replay,
+                                   verify_stack)
 from repro.core.tracegen import SHIFT_US, generate_trace
 from repro.parsers.gcd import GCDParser
 
@@ -113,6 +119,60 @@ def test_byte_index_matches_zip_truth(stacks):
                 for i in zf.infolist() if i.filename.startswith("w/")}
     assert members == real
     assert all(k.startswith("w/") for k in members)
+
+
+def test_member_crcs_embedded_and_verified(stacks):
+    chunked, flat, _ = stacks
+    for path in (chunked, flat):
+        crcs = stack_member_crcs(path)
+        assert crcs and all(k.startswith("w/") for k in crcs)
+        verify_stack(path)                     # pristine: no complaint
+        validate_replay(path, CFG, verify=True)
+    # chunked stacks checksum per chunk member
+    assert "w/00001/kind" in stack_member_crcs(chunked)
+
+
+def _corrupt_member(src: str, dst: str, member: str, mode: str):
+    """Copy ``src`` to ``dst`` and rot ``member``'s compressed bytes — a
+    mid-stream bit flip, or a zeroed tail half ("truncation" that keeps the
+    zip central directory intact, so the reader can still name the chunk)."""
+    shutil.copyfile(src, dst)
+    off, sz = replay_index(src)["members"][member]
+    with open(dst, "r+b") as f:
+        f.seek(off + 26)                       # local header: name/extra lens
+        name_len, extra_len = struct.unpack("<HH", f.read(4))
+        data_start = off + 30 + name_len + extra_len
+        if mode == "bitflip":
+            f.seek(data_start + sz // 2)
+            b = f.read(1)[0]
+            f.seek(data_start + sz // 2)
+            f.write(bytes([b ^ 0xFF]))
+        else:                                  # truncate
+            f.seek(data_start + sz // 2)
+            f.write(b"\x00" * (sz - sz // 2))
+
+
+@pytest.mark.parametrize("mode", ["bitflip", "truncate"])
+def test_corrupt_chunk_detected_by_index(stacks, tmp_path, mode):
+    chunked, _, _ = stacks
+    bad = str(tmp_path / f"{mode}.npz")
+    _corrupt_member(chunked, bad, "w/00001/kind", mode)
+    # eager verification names the corrupt chunk
+    with pytest.raises(StackCorruptionError, match="chunk 1"):
+        verify_stack(bad)
+    with pytest.raises(StackCorruptionError, match="chunk 1"):
+        validate_replay(bad, CFG, verify=True)
+    # replay over the corrupt range fails EAGERLY — at call time, before a
+    # single window is yielded (not mid-iteration on a prefetcher thread)
+    with pytest.raises(StackCorruptionError, match="chunk 1"):
+        replay_windows(bad, batch=8, start_window=8, verify=True)
+    with pytest.raises(StackCorruptionError, match="chunk 1"):
+        load_window_range(bad, 8, 16, verify=True)
+    # ranges that never touch chunk 1 (windows [8, 16)) stay servable
+    got = load_window_range(bad, 0, 8, verify=True)
+    assert got.kind.shape[0] == 8
+    assert sum(b.kind.shape[0] for b in
+               replay_windows(bad, batch=8, n_windows=8, verify=True)) == 8
 
 
 def test_fleet_from_precompiled_start_window(stacks):

@@ -1,0 +1,478 @@
+"""Chaos acceptance: armed FaultPlans must degrade the service gracefully,
+recovery must be complete, and post-recovery results must stay *bitwise*
+identical to unfaulted runs.
+
+Layers under test: the fault harness itself (determinism, zero-overhead
+unarmed), retry/breaker policies (seeded backoff, CLOSED/OPEN/HALF_OPEN with
+an injectable clock), the micro-batcher's failure paths (cancellation,
+deadlines, bounded-queue shedding + priority lane, supervised restarts), the
+what-if server end to end under injected launch/restore faults, and the
+crash-safe ingestion contract (interrupted precompile leaves nothing at the
+target path; corruption surfaces as typed errors naming the culprit)."""
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import REDUCED_SIM
+from repro.core.events import empty_window
+from repro.core.precompile import (StackCorruptionError, load_window_range,
+                                   precompile_stream, precompile_trace,
+                                   replay_config, stack_member_crcs,
+                                   verify_stack)
+from repro.core.snapshot import (SnapshotCorruptionError, load_snapshot,
+                                 save_snapshot)
+from repro.core.state import SimState, init_state
+from repro.core.tracegen import SHIFT_US, generate_trace
+from repro.resilience import (BreakerPolicy, CircuitBreaker, FaultPlan,
+                              FaultSpec, PersistentFault, RetryPolicy,
+                              TransientFault, armed, disarm, maybe_corrupt,
+                              maybe_fault)
+from repro.scenarios import ScenarioFleet, ScenarioSpec
+from repro.scenarios.report import scenario_report
+from repro.service import (ErrorCode, MicroBatcher, ServiceMetrics, Ticket,
+                           WhatIfQuery, WhatIfResult, WhatIfServer)
+
+BW = 16
+N_STACK = 64
+CFG = REDUCED_SIM
+
+
+@pytest.fixture(autouse=True)
+def _always_disarm():
+    """A failing test must never leave its plan armed for the next one."""
+    yield
+    disarm()
+
+
+@pytest.fixture(scope="module")
+def stack():
+    with tempfile.TemporaryDirectory() as d:
+        generate_trace(d, n_machines=16, n_jobs=40, horizon_windows=N_STACK,
+                       seed=5, usage_period_us=10_000_000)
+        path = os.path.join(d, "stack.npz")
+        precompile_trace(CFG, d, path, N_STACK,
+                         start_us=SHIFT_US - CFG.window_us, shard_windows=BW)
+        yield path
+
+
+@pytest.fixture(scope="module")
+def cfg(stack):
+    return replay_config(stack, CFG)
+
+
+# --- the fault harness -------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("s", "bogus")
+    with pytest.raises(ValueError):
+        FaultSpec("s", "transient", times=0)
+    with pytest.raises(ValueError):
+        FaultSpec("s", "transient", after=-1)
+    with pytest.raises(ValueError):
+        FaultSpec("s", "latency", delay_s=-0.1)
+
+
+def test_unarmed_is_a_noop():
+    maybe_fault("anything")                    # must not raise
+    data = b"untouched"
+    assert maybe_corrupt("anything", data) is data   # zero-copy passthrough
+
+
+def test_transient_persistent_latency_schedules():
+    plan = (FaultPlan()
+            .on("t", "transient", times=2)
+            .on("p", "persistent", after=1)
+            .on("l", "latency", times=1, delay_s=0.05))
+    with armed(plan):
+        for _ in range(2):
+            with pytest.raises(TransientFault):
+                maybe_fault("t")
+        maybe_fault("t")                       # exhausted: passes through
+        maybe_fault("p")                       # after=1: first call clean
+        for _ in range(3):
+            with pytest.raises(PersistentFault):
+                maybe_fault("p")               # then forever
+        t0 = time.perf_counter()
+        maybe_fault("l")
+        assert time.perf_counter() - t0 >= 0.05
+        maybe_fault("l")                       # latency exhausted
+    assert plan.calls("t") == 3 and plan.calls("p") == 4
+    assert plan.fired_at("t") == [("transient", 0), ("transient", 1)]
+    assert plan.fired_at("p") == [("persistent", 1), ("persistent", 2),
+                                  ("persistent", 3)]
+    assert plan.fired_at("l") == [("latency", 0)]
+
+
+def test_corruption_is_seeded_and_single_byte():
+    data = bytes(range(256)) * 4
+    outs = []
+    for _ in range(2):                         # same seed -> same chaos
+        plan = FaultPlan(seed=11).on("c", "corrupt")
+        with armed(plan):
+            outs.append(maybe_corrupt("c", data))
+            assert maybe_corrupt("c", data) == data    # times=1 exhausted
+    assert outs[0] == outs[1] != data
+    diff = [i for i, (a, b) in enumerate(zip(data, outs[0])) if a != b]
+    assert len(diff) == 1 and outs[0][diff[0]] == data[diff[0]] ^ 0xFF
+
+
+def test_plan_parse_cli_syntax():
+    plan = FaultPlan.parse("engine_launch:transient:2, chunk_load:latency:3:0.02")
+    with armed(plan):
+        with pytest.raises(TransientFault):
+            maybe_fault("engine_launch")
+        with pytest.raises(TransientFault):
+            maybe_fault("engine_launch")
+        maybe_fault("engine_launch")
+        maybe_fault("chunk_load")
+    assert plan.fired_at("chunk_load") == [("latency", 0)]
+    for bad in ("justasite", "s:nope", "s:transient:1:0.1:extra"):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+
+# --- retry + breaker policies ------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter_frac=1.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_delay_s=0.5, max_delay_s=0.1)
+    with pytest.raises(ValueError):
+        BreakerPolicy(failure_threshold=0)
+    with pytest.raises(ValueError):
+        BreakerPolicy(reset_timeout_s=0.0)
+    with pytest.raises(ValueError):
+        MicroBatcher(lambda ts: None, max_pending=0)
+    with pytest.raises(ValueError):
+        WhatIfQuery(ScenarioSpec(), n_windows=1, priority=-1)
+
+
+def test_retry_backoff_is_seeded_and_capped():
+    p = RetryPolicy(max_retries=4, base_delay_s=0.1, max_delay_s=0.3,
+                    jitter_frac=0.5, seed=7)
+    d1, d2 = list(p.delays()), list(p.delays())
+    assert d1 == d2 and len(d1) == 4           # deterministic per policy
+    caps = [min(0.3, 0.1 * 2 ** k) for k in range(4)]
+    for d, cap in zip(d1, caps):
+        assert 0.5 * cap <= d <= cap           # jitter shrinks, never grows
+    assert list(RetryPolicy(max_retries=0).delays()) == []
+
+
+def test_circuit_breaker_state_machine():
+    now = [0.0]
+    events = []
+    cb = CircuitBreaker(BreakerPolicy(failure_threshold=2, reset_timeout_s=5.0),
+                        on_transition=events.append, clock=lambda: now[0])
+    assert cb.allow() and cb.state == "closed"
+    cb.on_failure()
+    assert cb.state == "closed" and cb.allow()
+    cb.on_failure()                            # 2 consecutive: open
+    assert cb.state == "open" and events == ["open"]
+    assert not cb.allow() and cb.retry_after_s() == pytest.approx(5.0)
+    cb.on_success()                            # a success closes from anywhere
+    assert cb.state == "closed"
+    cb.on_failure(); cb.on_failure()           # re-open
+    now[0] = 5.0
+    assert cb.allow()                          # the half-open probe
+    assert cb.state == "half_open" and events[-1] == "probe"
+    assert not cb.allow()                      # ... and only one probe
+    cb.on_failure()                            # probe failed: re-open, re-arm
+    assert cb.state == "open" and not cb.allow()
+    now[0] = 10.0
+    assert cb.allow() and cb.state == "half_open"
+    cb.on_success()
+    assert cb.state == "closed" and events[-1] == "close" and cb.allow()
+
+
+# --- batcher failure paths ---------------------------------------------------
+
+def _ok_executor(log):
+    def execute(tickets):
+        log.append([t.query.spec.name for t in tickets])
+        for t in tickets:
+            t.finish(WhatIfResult(name=t.query.spec.name, scheduler="greedy",
+                                  start_window=0, n_windows=1, row={}))
+    return execute
+
+
+def test_abandoned_ticket_is_cancelled_not_launched():
+    log = []
+    mb = MicroBatcher(_ok_executor(log), max_lanes=4, max_wait_s=0.15,
+                      metrics=ServiceMetrics())
+    mb.start()
+    try:
+        t = mb.submit(WhatIfQuery(ScenarioSpec(name="ghost"), n_windows=1))
+        with pytest.raises(TimeoutError, match="cancelled"):
+            t.wait(timeout=0.01)               # caller gives up pre-dispatch
+        assert t.done.wait(10)                 # batcher still resolves it
+        assert t.result.code == ErrorCode.CANCELLED
+        assert log == []                       # the lane was never launched
+        m = mb.metrics.snapshot()
+        assert m["resilience"]["cancelled"] == 1
+        assert m["errors_by_code"] == {ErrorCode.CANCELLED: 1}
+    finally:
+        mb.stop()
+
+
+def test_expired_deadline_shed_at_dispatch():
+    log = []
+    mb = MicroBatcher(_ok_executor(log), max_lanes=4, max_wait_s=0.05,
+                      metrics=ServiceMetrics())
+    mb.start()
+    try:
+        t = mb.submit(WhatIfQuery(ScenarioSpec(name="late"), n_windows=1,
+                                  deadline_s=0.01))
+        r = t.wait(timeout=10)
+        assert not r.ok() and r.code == ErrorCode.DEADLINE_EXCEEDED
+        assert "deadline" in r.error and log == []
+        assert mb.metrics.snapshot()["resilience"]["deadline_missed"] == 1
+    finally:
+        mb.stop()
+
+
+def test_bounded_queue_sheds_best_effort_not_priority():
+    log = []
+    mb = MicroBatcher(_ok_executor(log), max_lanes=8, max_wait_s=30,
+                      metrics=ServiceMetrics(), max_pending=2)
+    mb.start()
+    t1 = mb.submit(WhatIfQuery(ScenarioSpec(name="a"), n_windows=1))
+    t2 = mb.submit(WhatIfQuery(ScenarioSpec(name="b"), n_windows=1))
+    t3 = mb.submit(WhatIfQuery(ScenarioSpec(name="c"), n_windows=1))
+    assert t3.done.is_set()                    # shed NOW, typed, no waiting
+    assert t3.result.code == ErrorCode.SHED and "shed" in t3.result.error
+    t4 = mb.submit(WhatIfQuery(ScenarioSpec(name="vip"), n_windows=1,
+                               priority=1))   # priority lane: bound exempt
+    assert not t4.done.is_set()
+    mb.stop(drain=True)
+    for t in (t1, t2, t4):
+        assert t.wait(timeout=10).ok()
+    assert mb.metrics.snapshot()["resilience"]["shed"] == 1
+
+
+def test_priority_bucket_launches_before_older_best_effort():
+    log = []
+    mb = MicroBatcher(_ok_executor(log), max_lanes=4, max_wait_s=0.01)
+    ta = Ticket(WhatIfQuery(ScenarioSpec(name="old"), n_windows=1))
+    tb = Ticket(WhatIfQuery(ScenarioSpec(name="vip"), n_windows=2,
+                            priority=1))
+    mb._buckets[ta.query.batch_key()] = [ta]   # ta is OLDER (made first)
+    mb._buckets[tb.query.batch_key()] = [tb]
+    mb._stop.set()                             # make every bucket eligible
+    assert mb._launch_ready() and mb._launch_ready()
+    assert log == [["vip"], ["old"]]           # priority beats age
+
+
+def test_supervised_batcher_restarts_and_recovers():
+    log = []
+    mb = MicroBatcher(_ok_executor(log), max_lanes=4, max_wait_s=0.02,
+                      metrics=ServiceMetrics())
+    plan = FaultPlan().on("batcher_loop", "transient", times=1)
+    with armed(plan):
+        mb.start()
+        t = mb.submit(WhatIfQuery(ScenarioSpec(name="survivor"),
+                                  n_windows=1))
+        r = t.wait(timeout=10)
+    mb.stop()
+    assert r.ok()                              # the crash lost nothing
+    assert mb.metrics.snapshot()["resilience"]["batcher_restarts"] == 1
+
+
+def test_batcher_gives_up_after_max_restarts():
+    mb = MicroBatcher(_ok_executor([]), max_lanes=4, max_wait_s=10,
+                      metrics=ServiceMetrics(), max_restarts=0)
+    plan = FaultPlan().on("batcher_loop", "persistent", after=1)
+    with armed(plan):
+        mb.start()                             # iteration 0 is clean: blocks
+        t = mb.submit(WhatIfQuery(ScenarioSpec(name="doomed"), n_windows=1))
+        r = t.wait(timeout=10)                 # iteration 1 crash-loops out
+    mb.stop()
+    assert not r.ok() and r.code == ErrorCode.EXECUTOR_ERROR
+    assert "crash-looped" in r.error
+    assert mb.metrics.snapshot()["resilience"]["batcher_restarts"] == 1
+
+
+# --- server chaos acceptance -------------------------------------------------
+
+def _server(stack, cfg, **kw):
+    srv = WhatIfServer(cfg, stack, schedulers=("greedy",), max_lanes=4,
+                       max_wait_s=0.01, batch_windows=BW, **kw)
+    srv.start(warm=True)
+    return srv
+
+
+def test_transient_launch_faults_absorbed_bitwise(stack, cfg):
+    srv = _server(stack, cfg,
+                  retry=RetryPolicy(max_retries=3, base_delay_s=0.001,
+                                    max_delay_s=0.01, seed=1))
+    specs = [ScenarioSpec(name="t0", scheduler="greedy"),
+             ScenarioSpec(name="t1", scheduler="greedy",
+                          node_outage_frac=0.25)]
+    plan = (FaultPlan()
+            .on("engine_launch", "transient", times=2)
+            .on("chunk_load", "latency", times=2, delay_s=0.01))
+    try:
+        with armed(plan):
+            tickets = [srv.submit(WhatIfQuery(s, n_windows=32))
+                       for s in specs]
+            results = [t.wait(timeout=300) for t in tickets]
+        assert all(r.ok() for r in results), [r.error for r in results]
+        s = srv.stats()
+        assert s["resilience"]["retries"] == 2
+        assert s["resilience"]["launch_failures"] == 2
+        assert s["errors_by_code"] == {}
+        assert plan.fired_at("engine_launch") == [("transient", 0),
+                                                  ("transient", 1)]
+        assert plan.fired_at("chunk_load")     # slow loads really happened
+    finally:
+        srv.stop()
+    # graceful degradation is not enough: served-under-chaos must be bitwise
+    # identical to an unfaulted direct fleet run
+    fleet = ScenarioFleet.from_precompiled(cfg, stack, specs,
+                                           batch_windows=BW, n_windows=32)
+    fleet.run()
+    frame = fleet.stats_frame()
+    for i, (spec, r) in enumerate(zip(specs, results)):
+        for k, v in r.frame.items():
+            assert np.array_equal(v, frame[k][:, i]), k
+        want = scenario_report([spec.name],
+                               {k: v[:, i:i + 1] for k, v in frame.items()},
+                               [spec.scheduler])["scenarios"][0]
+        assert r.row == want
+
+
+def test_fork_restore_fault_retried(stack, cfg):
+    srv = _server(stack, cfg,
+                  retry=RetryPolicy(max_retries=2, base_delay_s=0.001,
+                                    max_delay_s=0.01))
+    try:
+        srv.build_fork_points([ScenarioSpec(name="trunk",
+                                            scheduler="greedy")], every=BW)
+        plan = FaultPlan().on("fork_restore", "transient", times=1)
+        with armed(plan):
+            r = srv.query(WhatIfQuery(ScenarioSpec(name="cont",
+                                                   scheduler="greedy"),
+                                      n_windows=BW, start_window=BW),
+                          timeout=300)
+        assert r.ok(), r.error
+        assert srv.stats()["resilience"]["retries"] == 1
+    finally:
+        srv.stop()
+
+
+def test_breaker_opens_fast_fails_and_recovers_bitwise(stack, cfg):
+    srv = _server(stack, cfg,
+                  retry=RetryPolicy(max_retries=1, base_delay_s=0.001,
+                                    max_delay_s=0.01),
+                  breaker=BreakerPolicy(failure_threshold=2,
+                                        reset_timeout_s=0.5))
+    spec = ScenarioSpec(name="b", scheduler="greedy")
+    try:
+        with armed(FaultPlan().on("engine_launch", "persistent")):
+            r1 = srv.query(WhatIfQuery(spec, n_windows=BW), timeout=60)
+            r2 = srv.query(WhatIfQuery(spec, n_windows=BW), timeout=60)
+            for r in (r1, r2):
+                assert not r.ok() and r.code == ErrorCode.EXECUTOR_ERROR
+                assert "injected persistent fault" in r.error
+            s = srv.stats()["resilience"]
+            assert s["breaker_opens"] == 1
+            assert s["launch_failures"] == 4   # 2 queries x (1 try + 1 retry)
+            assert not srv.engines.warmed      # poisoned program evicted
+            # while open: fail fast, typed, no launch attempted
+            r3 = srv.query(WhatIfQuery(spec, n_windows=BW), timeout=60)
+            assert not r3.ok() and r3.code == ErrorCode.BREAKER_OPEN
+            assert srv.stats()["resilience"]["launch_failures"] == 4
+        time.sleep(0.6)                        # fault gone; reset timeout up
+        r4 = srv.query(WhatIfQuery(spec, n_windows=BW), timeout=300)
+        assert r4.ok(), r4.error               # half-open probe recompiled
+        s = srv.stats()
+        assert s["resilience"]["breaker_probes"] == 1
+        assert s["resilience"]["breaker_closes"] == 1
+        assert s["errors_by_code"] == {ErrorCode.EXECUTOR_ERROR: 2,
+                                       ErrorCode.BREAKER_OPEN: 1}
+    finally:
+        srv.stop()
+    # post-recovery result is bitwise-identical to an unfaulted run
+    fleet = ScenarioFleet.from_precompiled(cfg, stack, [spec],
+                                           batch_windows=BW, n_windows=BW)
+    fleet.run()
+    frame = fleet.stats_frame()
+    for k, v in r4.frame.items():
+        assert np.array_equal(v, frame[k][:, 0]), k
+
+
+def test_server_validates_deadline_and_policies(stack, cfg):
+    srv = _server(stack, cfg)
+    try:
+        r = srv.query(WhatIfQuery(ScenarioSpec(scheduler="greedy"),
+                                  n_windows=8, deadline_s=0.0), timeout=60)
+        assert not r.ok() and r.code == ErrorCode.INVALID
+        assert "deadline" in r.error
+    finally:
+        srv.stop()
+    with pytest.raises(ValueError, match="max_retries"):
+        WhatIfServer(cfg, stack, retry=RetryPolicy(max_retries=-1))
+
+
+# --- crash-safe ingestion + checksum verification ----------------------------
+
+def _empty_stream(n):
+    for _ in range(n):
+        yield empty_window(CFG)
+
+
+def test_interrupted_precompile_leaves_no_file(tmp_path):
+    target = str(tmp_path / "stack.npz")
+    with armed(FaultPlan().on("precompile_write", "transient", times=1)):
+        with pytest.raises(TransientFault):
+            precompile_stream(CFG, _empty_stream(12), target, 12,
+                              shard_windows=4)
+    # the acceptance contract: nothing at the target path, no tmp litter
+    assert not os.path.exists(target)
+    assert os.listdir(tmp_path) == []
+    # an unfaulted rerun lands atomically, with checksums embedded
+    precompile_stream(CFG, _empty_stream(12), target, 12, shard_windows=4)
+    verify_stack(target)
+    crcs = stack_member_crcs(target)
+    assert crcs and all(k.startswith("w/") for k in crcs)
+
+
+def test_chunk_read_corruption_detected(tmp_path):
+    target = str(tmp_path / "stack.npz")
+    precompile_stream(CFG, _empty_stream(12), target, 12, shard_windows=4)
+    with armed(FaultPlan(seed=3).on("chunk_read", "corrupt", times=1)):
+        with pytest.raises(StackCorruptionError, match="chunk 0"):
+            verify_stack(target)
+    verify_stack(target)                       # pristine once disarmed
+    with armed(FaultPlan(seed=3).on("chunk_read", "corrupt", times=1)):
+        with pytest.raises(StackCorruptionError):
+            load_window_range(target, 0, 4, verify=True)
+
+
+def test_snapshot_checksum_on_save_verify_on_restore(tmp_path):
+    p = str(tmp_path / "snap.npz")
+    state = init_state(CFG)
+    save_snapshot(p, state, CFG, windows_done=3, extra={"k": 1})
+    snap = load_snapshot(p)                    # verify=True is the default
+    assert snap.windows_done == 3 and snap.extra == {"k": 1}
+    with armed(FaultPlan().on("snapshot_restore", "transient", times=1)):
+        with pytest.raises(TransientFault):
+            load_snapshot(p)
+    # rot one byte of one field, keeping the recorded meta
+    with np.load(p, allow_pickle=False) as z:
+        meta = str(z["__meta__"])
+        arrays = {k: np.asarray(z[k]).copy() for k in z.files
+                  if k != "__meta__"}
+    field = next(f for f in SimState._fields if arrays[f"state/{f}"].size)
+    arrays[f"state/{field}"].view(np.uint8).flat[0] ^= 0xFF
+    with open(p, "wb") as f:
+        np.savez(f, __meta__=meta, **arrays)
+    with pytest.raises(SnapshotCorruptionError, match=field):
+        load_snapshot(p)
+    load_snapshot(p, verify=False)             # explicit opt-out still loads

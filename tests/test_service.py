@@ -90,6 +90,8 @@ def test_query_validation():
         WhatIfQuery(ScenarioSpec(), n_windows=0)
     with pytest.raises(ValueError):
         WhatIfQuery(ScenarioSpec(), n_windows=4, start_window=-1)
+    with pytest.raises(ValueError):
+        WhatIfQuery(ScenarioSpec(), n_windows=4, priority=-1)
 
 
 # --- serving equivalence -----------------------------------------------------
@@ -187,6 +189,8 @@ def test_submit_time_errors(server):
 
     assert "serving table" in err_of(
         WhatIfQuery(ScenarioSpec(scheduler="round_robin"), n_windows=8))
+    assert "deadline" in err_of(
+        WhatIfQuery(ScenarioSpec(), n_windows=8, deadline_s=0.0))
     assert "injection slot pool" in err_of(
         WhatIfQuery(ScenarioSpec(arrival_rate=2.0), n_windows=8))
     assert "outside the stack" in err_of(
